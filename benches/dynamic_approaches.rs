@@ -1,0 +1,59 @@
+//! Bench: the five update approaches across batch sizes on the device
+//! engine (paper Figures 3/4 in miniature).
+
+use pagerank_dynamic::batch::{self, random_batch};
+use pagerank_dynamic::engines::{native, Approach};
+use pagerank_dynamic::generators::families;
+use pagerank_dynamic::harness::experiments::{Runner, Substrate};
+use pagerank_dynamic::harness::fmt_dur;
+use pagerank_dynamic::runtime::ArtifactStore;
+use pagerank_dynamic::PagerankConfig;
+
+fn main() {
+    let cfg = PagerankConfig::default();
+    let store = std::sync::Arc::new(ArtifactStore::open_default().expect("make artifacts"));
+    let runner = Runner { store: Some(store), cfg };
+
+    for name in ["com-LiveJournal", "asia_osm"] {
+        let d = families::dataset(name).unwrap();
+        let base = d.build();
+        let g0 = base.to_csr();
+        let gt0 = g0.transpose();
+        let prev = native::static_pagerank(&g0, &gt0, &cfg, None).ranks;
+        let m = g0.num_edges();
+        println!("\n{name} (n={}, m={m})", g0.num_vertices());
+        println!(
+            "{:>10} {:>10} {:>10} {:>10} {:>10} {:>10}  {:>8}",
+            "B/|E|", "Static", "ND", "DT", "DF", "DF-P", "DFP-spdp"
+        );
+        for frac in [1e-6f64, 1e-5, 1e-4, 1e-3] {
+            let bsize = ((m as f64 * frac).round() as usize).max(1);
+            let mut b = base.clone();
+            let upd = random_batch(&b, bsize, 0.8, 1234);
+            let old = b.to_csr();
+            batch::apply(&mut b, &upd);
+            let g = b.to_csr();
+            let gt = g.transpose();
+
+            let mut t = std::collections::HashMap::new();
+            for a in Approach::ALL {
+                let res = runner
+                    .run(a, Substrate::Device, &g, &gt, &old, Some(&prev), &upd)
+                    .unwrap();
+                t.insert(a, res.elapsed);
+            }
+            println!(
+                "{:>10.0e} {:>10} {:>10} {:>10} {:>10} {:>10}  {:>7.1}x",
+                frac,
+                fmt_dur(t[&Approach::Static]),
+                fmt_dur(t[&Approach::NaiveDynamic]),
+                fmt_dur(t[&Approach::DynamicTraversal]),
+                fmt_dur(t[&Approach::DynamicFrontier]),
+                fmt_dur(t[&Approach::DynamicFrontierPruning]),
+                t[&Approach::Static].as_secs_f64()
+                    / t[&Approach::DynamicFrontierPruning].as_secs_f64()
+            );
+        }
+    }
+    println!("\n(paper fig4: DF-P 3.1x over Static for small random batches)");
+}

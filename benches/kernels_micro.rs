@@ -1,0 +1,144 @@
+//! Bench: kernel-level microbenchmarks — per-launch latency of each
+//! artifact (step variants, expansions, peeks, the standalone Pallas
+//! kernels) across tiers. This is the L1/L2 profile that drives the perf
+//! pass (EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+use pagerank_dynamic::engines::native;
+use pagerank_dynamic::generators::rmat;
+use pagerank_dynamic::harness::fmt_dur;
+use pagerank_dynamic::runtime::exec::{buf_f64, buf_i32, exec1, GraphBufs};
+use pagerank_dynamic::runtime::artifacts::{lit_f64, lit_i32_2d, run};
+use pagerank_dynamic::runtime::ArtifactStore;
+use pagerank_dynamic::PagerankConfig;
+
+const REPEATS: usize = 7;
+
+fn bench_ns<F: FnMut()>(mut f: F) -> f64 {
+    f(); // warmup (compilation cached already)
+    let mut best = f64::MAX;
+    for _ in 0..REPEATS {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let store = ArtifactStore::open_default().expect("make artifacts");
+    let cfg = PagerankConfig::default();
+
+    for (tier_name, scale, deg) in [("t10", 9u32, 6.0), ("t13", 12, 8.0), ("t16", 15, 10.0)] {
+        let tier = store.manifest().tier(tier_name).unwrap().clone();
+        let b = rmat::generate(scale, deg, rmat::RmatParams::WEB, 3);
+        let g = b.to_csr();
+        let gt = g.transpose();
+        let dg = pagerank_dynamic::runtime::DeviceGraph::pack(&g, &gt, &tier).unwrap();
+        println!(
+            "\n=== tier {tier_name}: V={} ECAP={} NC={} (graph n={} m={}) ===",
+            tier.v,
+            tier.ecap,
+            tier.nc,
+            g.num_vertices(),
+            g.num_edges()
+        );
+
+        let bufs = GraphBufs::build(&store, &dg).unwrap();
+        let ranks = native::static_pagerank(&g, &gt, &cfg, None).ranks;
+
+        // packed states: [r | linf] and [r | aff | dn | linf]
+        let mut s1 = dg.pad(&ranks);
+        s1.push(0.0);
+        let state1 = buf_f64(&store, &s1, &[tier.v + 1]).unwrap();
+        let mut s3 = dg.pad(&ranks);
+        s3.extend(vec![1.0; tier.v]); // aff = all
+        s3.extend(vec![0.0; tier.v + 1]); // dn, linf
+        let state3 = buf_f64(&store, &s3, &[3 * tier.v + 1]).unwrap();
+
+        let row = |name: &str, t: f64| {
+            println!(
+                "  {:<24} {:>10}  ({:.1} Medges/s)",
+                name,
+                fmt_dur(std::time::Duration::from_secs_f64(t)),
+                g.num_edges() as f64 / t / 1e6
+            );
+        };
+
+        let exe = store.executable("step_plain", tier_name).unwrap();
+        row("step_plain", bench_ns(|| {
+            exec1(&exe, &[
+                &state1, &bufs.odi, &bufs.valid, &bufs.inv_n,
+                &bufs.ell, &bufs.hub_edges, &bufs.hub_seg,
+            ])
+            .unwrap();
+        }));
+
+        let exe = store.executable("step_dfp", tier_name).unwrap();
+        row("step_dfp (all aff)", bench_ns(|| {
+            exec1(&exe, &[
+                &state3, &bufs.odi, &bufs.valid, &bufs.inv_n,
+                &bufs.ell, &bufs.hub_edges, &bufs.hub_seg,
+            ])
+            .unwrap();
+        }));
+
+        let exe = store.executable("step_dfp_nopart", tier_name).unwrap();
+        row("step_dfp_nopart", bench_ns(|| {
+            exec1(&exe, &[
+                &state3, &bufs.odi, &bufs.valid, &bufs.inv_n,
+                &bufs.te_src, &bufs.te_dst,
+            ])
+            .unwrap();
+        }));
+
+        // worklist variant with a ~2% frontier
+        let mut flags = vec![0.0; tier.v];
+        for v in (0..dg.n).step_by(dg.n / 50 + 1) {
+            flags[v] = 1.0;
+        }
+        if let Some((wl, wlc)) = dg.worklists(&flags, &dg.in_side) {
+            let wl_b = buf_i32(&store, &wl, &[tier.wl_cap]).unwrap();
+            let wlc_b = buf_i32(&store, &wlc, &[tier.wl_chunk_cap]).unwrap();
+            let exe = store.executable("step_dfp_wl", tier_name).unwrap();
+            row("step_dfp_wl (~2% aff)", bench_ns(|| {
+                exec1(&exe, &[
+                    &state3, &bufs.odi, &bufs.valid, &bufs.inv_n,
+                    &bufs.ell, &bufs.hub_edges, &bufs.hub_seg, &wl_b, &wlc_b,
+                ])
+                .unwrap();
+            }));
+        }
+
+        let exe = store.executable("expand_pull", tier_name).unwrap();
+        row("expand_pull", bench_ns(|| {
+            exec1(&exe, &[&state3, &bufs.ell, &bufs.hub_edges, &bufs.hub_seg]).unwrap();
+        }));
+
+        let exe = store.executable("expand_flat", tier_name).unwrap();
+        row("expand_flat", bench_ns(|| {
+            exec1(&exe, &[&state3, &bufs.te_src, &bufs.te_dst]).unwrap();
+        }));
+
+        let exe = store.executable("peek_linf3", tier_name).unwrap();
+        row("peek_linf3 (8B read)", bench_ns(|| {
+            exec1(&exe, &[&state3]).unwrap();
+        }));
+
+        // standalone Pallas kernels (interpret-mode cost — the production
+        // steps bake the fused forms; see kernels/fused.py)
+        let contrib = lit_f64(&dg.outdeg_inv);
+        let ell_lit = lit_i32_2d(&dg.in_side.ell, tier.v, tier.w).unwrap();
+        let exe = store.executable("kernel_ell_sum", tier_name).unwrap();
+        row("pallas ell_sum", bench_ns(|| {
+            run(&exe, &[&contrib, &ell_lit]).unwrap();
+        }));
+        let a_lit = lit_f64(&dg.outdeg_inv);
+        let b_lit = lit_f64(&dg.valid);
+        let exe = store.executable("kernel_linf", tier_name).unwrap();
+        row("pallas linf", bench_ns(|| {
+            run(&exe, &[&a_lit, &b_lit]).unwrap();
+        }));
+    }
+}

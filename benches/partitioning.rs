@@ -1,0 +1,56 @@
+//! Bench: work-partitioning ablation for DF / DF-P (paper Figure 1) plus
+//! worklist compaction on/off.
+
+use pagerank_dynamic::batch::{self, random_batch};
+use pagerank_dynamic::engines::device::{DeviceEngine, PartitionMode};
+use pagerank_dynamic::engines::native;
+use pagerank_dynamic::generators::families;
+use pagerank_dynamic::harness::fmt_dur;
+use pagerank_dynamic::runtime::{ArtifactStore, DeviceGraph};
+use pagerank_dynamic::PagerankConfig;
+
+fn main() {
+    let cfg = PagerankConfig::default();
+    let store = ArtifactStore::open_default().expect("make artifacts");
+    let eng = DeviceEngine::new(&store);
+
+    let d = families::dataset("it-2004").unwrap();
+    let mut b = d.build();
+    let g0 = b.to_csr();
+    let gt0 = g0.transpose();
+    let prev = native::static_pagerank(&g0, &gt0, &cfg, None).ranks;
+    let upd = random_batch(&b, (g0.num_edges() / 20_000).max(4), 0.8, 7);
+    batch::apply(&mut b, &upd);
+    let g = b.to_csr();
+    let gt = g.transpose();
+    let tier = store.tier_for(g.num_vertices(), g.num_edges()).unwrap();
+    let dg = DeviceGraph::pack(&g, &gt, &tier).unwrap();
+
+    println!("it-2004 stand-in, batch {} edges\n", upd.len());
+    println!("{:<28} {:>10} {:>10}", "configuration", "DF", "DF-P");
+    for mode in [
+        PartitionMode::DontPartition,
+        PartitionMode::PartitionGPrime,
+        PartitionMode::PartitionBoth,
+        PartitionMode::PartitionBothPull,
+    ] {
+        for wl in [false, true] {
+            if wl && mode == PartitionMode::DontPartition {
+                continue; // worklist needs partitioned structures
+            }
+            let df = eng
+                .dynamic_frontier(&dg, &g, &cfg, &prev, &upd, false, mode, wl)
+                .unwrap();
+            let dfp = eng
+                .dynamic_frontier(&dg, &g, &cfg, &prev, &upd, true, mode, wl)
+                .unwrap();
+            println!(
+                "{:<28} {:>10} {:>10}",
+                format!("{}{}", mode.label(), if wl { " +wl" } else { "" }),
+                fmt_dur(df.elapsed),
+                fmt_dur(dfp.elapsed)
+            );
+        }
+    }
+    println!("\n(paper fig1: Partition G, G' fastest; nopart slowest)");
+}

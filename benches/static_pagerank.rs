@@ -1,0 +1,63 @@
+//! Bench: Static PageRank end-to-end — device engine vs native CPU vs the
+//! Hornet-like / Gunrock-like baselines (paper Table 1 / Figure 2).
+//!
+//! Plain-harness bench (offline build: no criterion): median of repeated
+//! runs with warmup, printed as an aligned table.
+
+
+
+use pagerank_dynamic::engines::baselines::{gunrock_like, hornet_like};
+use pagerank_dynamic::engines::native;
+use pagerank_dynamic::generators::families;
+use pagerank_dynamic::harness::fmt_dur;
+use pagerank_dynamic::runtime::{ArtifactStore, DeviceGraph};
+use pagerank_dynamic::PagerankConfig;
+use pagerank_dynamic::engines::device::DeviceEngine;
+
+const REPEATS: usize = 3;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn bench<F: FnMut() -> std::time::Duration>(mut f: F) -> std::time::Duration {
+    let _ = f(); // warmup
+    let samples: Vec<f64> = (0..REPEATS).map(|_| f().as_secs_f64()).collect();
+    std::time::Duration::from_secs_f64(median(samples))
+}
+
+fn main() {
+    let cfg = PagerankConfig::default();
+    let store = ArtifactStore::open_default().expect("make artifacts");
+    let eng = DeviceEngine::new(&store);
+
+    println!(
+        "{:<18} {:>9} {:>9} {:>9} {:>9}  {:>8} {:>8}",
+        "graph", "hornet", "gunrock", "ours-CPU", "ours-GPU", "vs hor", "vs gun"
+    );
+    for name in ["it-2004", "sk-2005", "com-Orkut", "asia_osm", "kmer_A2a"] {
+        let d = families::dataset(name).unwrap();
+        let g = d.build().to_csr();
+        let gt = g.transpose();
+        let tier = store.tier_for(g.num_vertices(), g.num_edges()).unwrap();
+        let dg = DeviceGraph::pack(&g, &gt, &tier).unwrap();
+
+        let t_h = bench(|| hornet_like(&g, &cfg).elapsed);
+        let t_g = bench(|| gunrock_like(&g, &cfg).elapsed);
+        let t_c = bench(|| native::static_pagerank(&g, &gt, &cfg, None).elapsed);
+        let t_d = bench(|| eng.static_pagerank(&dg, &cfg, None).unwrap().elapsed);
+
+        println!(
+            "{:<18} {:>9} {:>9} {:>9} {:>9}  {:>7.1}x {:>7.1}x",
+            name,
+            fmt_dur(t_h),
+            fmt_dur(t_g),
+            fmt_dur(t_c),
+            fmt_dur(t_d),
+            t_h.as_secs_f64() / t_d.as_secs_f64(),
+            t_g.as_secs_f64() / t_d.as_secs_f64(),
+        );
+    }
+    println!("\n(paper: ours-GPU 31x vs Hornet, 5.9x vs Gunrock, 24x vs ours-CPU on A100)");
+}

@@ -1,0 +1,145 @@
+"""AOT: lower every L2 artifact to HLO text + write the manifest.
+
+Runs ONCE at build time (``make artifacts``); Python is never on the request
+path. HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--tiers t10,t13,t16]``
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .formats import (  # noqa: E402
+    CHUNK_WIDTH,
+    DEGREE_THRESHOLD,
+    ELL_WIDTH,
+    TIERS,
+    Tier,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False: every artifact returns a single packed array, so
+    # the Rust side can chain device-resident PJRT buffers between launches
+    # (tuple-shaped output buffers cannot be split through the xla crate).
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dtype) -> str:
+    import numpy as np
+
+    return np.dtype(dtype).name  # "float64" / "int32"
+
+
+def lower_tier(tier: Tier, out_dir: str, impl: str) -> list[dict]:
+    entries = []
+    for name, (fn, inputs, output_names) in model.artifact_specs(
+        tier, impl=impl
+    ).items():
+        specs = [jax.ShapeDtypeStruct(shape, dtype) for _, shape, dtype in inputs]
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{tier.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        print(
+            f"  {fname:32s} {len(text) / 1024:8.1f} KiB "
+            f"({time.time() - t0:.1f}s)"
+        )
+        entries.append(
+            {
+                "name": name,
+                "tier": tier.name,
+                "file": fname,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "inputs": [
+                    {
+                        "name": in_name,
+                        "shape": list(shape),
+                        "dtype": _dtype_name(dtype),
+                    }
+                    for in_name, shape, dtype in inputs
+                ],
+                "outputs": output_names,
+            }
+        )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--tiers",
+        default=",".join(t.name for t in TIERS),
+        help="comma-separated tier names to lower",
+    )
+    ap.add_argument(
+        "--impl",
+        default="fused",
+        choices=["fused", "pallas"],
+        help="kernel implementation baked into the step/expand artifacts "
+        "(the standalone kernel_* artifacts are always Pallas)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    wanted = set(args.tiers.split(","))
+    tiers = [t for t in TIERS if t.name in wanted]
+    assert tiers, f"no tiers match {args.tiers}"
+
+    manifest = {
+        "format_version": 1,
+        "kernel_impl": args.impl,
+        "constants": {
+            "alpha": model.ALPHA,
+            "tau_frontier": model.TAU_FRONTIER,
+            "tau_prune": model.TAU_PRUNE,
+            "degree_threshold": DEGREE_THRESHOLD,
+            "ell_width": ELL_WIDTH,
+            "chunk_width": CHUNK_WIDTH,
+        },
+        "tiers": [
+            {
+                "name": t.name,
+                "v": t.v,
+                "ecap": t.ecap,
+                "w": t.w,
+                "c": t.c,
+                "nc": t.nc,
+                "wl_cap": t.wl_cap,
+                "wl_chunk_cap": t.wl_chunk_cap,
+            }
+            for t in tiers
+        ],
+        "artifacts": [],
+    }
+    for tier in tiers:
+        print(f"tier {tier.name}: V={tier.v} ECAP={tier.ecap} NC={tier.nc}")
+        manifest["artifacts"].extend(lower_tier(tier, args.out_dir, args.impl))
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

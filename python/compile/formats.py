@@ -1,0 +1,220 @@
+"""Device graph formats: the layout contract between Python (build time) and Rust (run time).
+
+Everything the AOT artifacts consume is a fixed-shape, padded view of a graph.
+This module is the single source of truth for that layout; ``rust/src/runtime/tier.rs``
+mirrors it exactly, and ``artifacts/manifest.json`` (written by ``aot.py``)
+records the shapes so Rust can assert against them.
+
+Tier layout (all shapes fixed per tier; ``V`` and ``ECAP`` are powers of two):
+
+- vertex ids are ``int32``; ranks are ``float64`` (paper uses 32-bit ids,
+  64-bit ranks, Section 5.1.2).
+- the *sentinel* vertex is index ``V - 1``. A graph with ``n`` real vertices
+  fits a tier iff ``n <= V - 1`` and ``m <= ECAP`` edges. All index padding
+  points at the sentinel, whose contribution is always 0 because
+  ``outdeg_inv[V-1] == 0``.
+- ``ell_idx   : i32[V, W]`` — row ``v`` holds the in-neighbors of ``v`` if
+  ``indeg(v) <= W`` (a *low in-degree* vertex), padded with sentinels; rows of
+  high in-degree vertices are all-sentinel. This feeds the
+  "thread-per-vertex" analog kernel (``ell_block_sum``).
+- ``hub_edges : i32[NC, C]``, ``hub_seg : i32[NC]`` — the in-neighbors of
+  each *high in-degree* vertex (``indeg > W``), split into chunks of ``C``;
+  ``hub_seg[row]`` is the destination vertex id (padding rows point at the
+  sentinel). This feeds the "block-per-vertex" analog: a partial sum per
+  chunk (same Pallas kernel, different tiling) + a tiny segment combine.
+  ``NC = ECAP / 16`` fits whenever hub edges <= ~ECAP/2 (chunks <=
+  hubE/16 + hubE/17); the packer retries the next tier up on overflow.
+- ``out_ell_idx / out_hub_edges / out_hub_seg`` — the same structure over
+  *out*-neighbors, partitioned by out-degree. Used by the scatter variant of
+  frontier expansion (the paper partitions expansion by out-degree).
+- ``te_src / te_dst : i32[ECAP]`` — the flat edge list of G (u -> v), used by
+  the "Don't Partition" ablation (Figure 1) and the flat expansion variant.
+- ``outdeg_inv : f64[V]`` — 1/outdeg for real vertices (every vertex has a
+  self-loop, so outdeg >= 1), 0 for padding and the sentinel.
+- ``valid : f64[V]`` — 1.0 for real vertices, else 0.
+- ``inv_n : f64[1]`` — 1/n (n = number of real vertices).
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+#: degree threshold D_P: in/out-degree <= D_P is handled by the ELL
+#: ("thread-per-vertex") kernel; above it, by the chunked hub kernel.
+DEGREE_THRESHOLD = 16
+#: ELL width (== D_P so any low-degree row fits exactly).
+ELL_WIDTH = 16
+#: hub chunk width.
+CHUNK_WIDTH = 16
+
+
+@dataclass(frozen=True)
+class Tier:
+    """A fixed-shape artifact size class."""
+
+    name: str
+    v: int  # vertex capacity, incl. sentinel slot V-1
+    ecap: int  # edge capacity
+
+    @property
+    def w(self) -> int:
+        return ELL_WIDTH
+
+    @property
+    def c(self) -> int:
+        return CHUNK_WIDTH
+
+    @property
+    def nc(self) -> int:
+        # chunk-row capacity: covers hub edges up to ~ECAP/2 (chunks <=
+        # hubE/16 + hubE/17 ~= hubE/8.2). Degenerate hub-heavy graphs
+        # overflow the packer, which retries one tier up (2x ECAP). Halving
+        # this from the safe ECAP/8 bound halves the fixed per-iteration
+        # hub-gather work — see EXPERIMENTS.md §Perf.
+        return self.ecap // 16
+
+    @property
+    def wl_cap(self) -> int:
+        # worklist-compacted step capacity (affected vertex ids).
+        return self.v // 16
+
+    @property
+    def wl_chunk_cap(self) -> int:
+        # worklist-compacted hub chunk row capacity.
+        return self.nc // 16
+
+    def fits(self, n: int, m: int) -> bool:
+        return n <= self.v - 1 and m <= self.ecap
+
+
+#: Tier set compiled by aot.py (vertex capacity 2^k, edge capacity 16x).
+#: Fixed shapes mean padded work, so tiers are spaced one octave apart to cap
+#: the padding tax at ~2x; graphs larger than the biggest tier fall back to
+#: the Rust native engine.
+TIERS = (
+    Tier("t10", 1 << 10, 1 << 14),
+    Tier("t12", 1 << 12, 1 << 16),
+    Tier("t13", 1 << 13, 1 << 17),
+    Tier("t14", 1 << 14, 1 << 18),
+    Tier("t15", 1 << 15, 1 << 19),
+    Tier("t16", 1 << 16, 1 << 20),
+)
+
+
+def tier_by_name(name: str) -> Tier:
+    for t in TIERS:
+        if t.name == name:
+            return t
+    raise KeyError(name)
+
+
+def smallest_fitting_tier(n: int, m: int) -> Tier | None:
+    for t in TIERS:
+        if t.fits(n, m):
+            return t
+    return None
+
+
+def _check_adj(adj: list[list[int]], n: int) -> None:
+    assert len(adj) == n
+    for vs in adj:
+        for u in vs:
+            assert 0 <= u < n
+
+
+def transpose_adj(adj: list[list[int]]) -> list[list[int]]:
+    n = len(adj)
+    tadj: list[list[int]] = [[] for _ in range(n)]
+    for u, vs in enumerate(adj):
+        for v in vs:
+            tadj[v].append(u)
+    return tadj
+
+
+def build_ell_and_hubs(adj: list[list[int]], tier: Tier):
+    """Partition ``adj`` rows by degree into (ELL matrix, hub chunks, hub segs).
+
+    Returns ``(ell_idx [V,W] i32, hub_edges [NC,C] i32, hub_seg [NC] i32)``.
+    Row v of ``ell_idx`` is adj[v] (sentinel-padded) when ``len(adj[v]) <= W``,
+    else all-sentinel with adj[v] routed to hub chunks with segment id v.
+    """
+    v_cap, w, c, nc = tier.v, tier.w, tier.c, tier.nc
+    sentinel = v_cap - 1
+    n = len(adj)
+    assert n <= sentinel, f"graph n={n} exceeds tier {tier.name} capacity"
+
+    ell = np.full((v_cap, w), sentinel, dtype=np.int32)
+    hub_edges = np.full((nc, c), sentinel, dtype=np.int32)
+    hub_seg = np.full((nc,), sentinel, dtype=np.int32)
+
+    row = 0
+    for v, nbrs in enumerate(adj):
+        d = len(nbrs)
+        if d <= w:
+            if d:
+                ell[v, :d] = np.asarray(nbrs, dtype=np.int32)
+        else:
+            for off in range(0, d, c):
+                chunk = nbrs[off : off + c]
+                # row NC-1 stays unused: it is the sentinel target of padded
+                # worklist chunk ids (its edges are all-sentinel, seg = V-1).
+                assert row < nc - 1, f"hub chunk overflow in tier {tier.name}"
+                hub_edges[row, : len(chunk)] = np.asarray(chunk, dtype=np.int32)
+                hub_seg[row] = v
+                row += 1
+    return ell, hub_edges, hub_seg
+
+
+def build_flat_edges(adj: list[list[int]], tier: Tier):
+    """Flat (src, dst) edge list of G, sentinel-padded to ECAP."""
+    sentinel = tier.v - 1
+    src = np.full((tier.ecap,), sentinel, dtype=np.int32)
+    dst = np.full((tier.ecap,), sentinel, dtype=np.int32)
+    i = 0
+    for u, vs in enumerate(adj):
+        for v in vs:
+            assert i < tier.ecap, f"edge overflow in tier {tier.name}"
+            src[i] = u
+            dst[i] = v
+            i += 1
+    return src, dst
+
+
+def build_device_graph(adj: list[list[int]], tier: Tier) -> dict[str, np.ndarray]:
+    """Build every tier-shaped array the artifacts consume, from an
+    out-adjacency list (self-loops must already be present; no dead ends)."""
+    n = len(adj)
+    _check_adj(adj, n)
+    for v, vs in enumerate(adj):
+        assert len(vs) >= 1, f"dead end at vertex {v}: add self-loops first"
+
+    tadj = transpose_adj(adj)
+    ell_idx, hub_edges, hub_seg = build_ell_and_hubs(tadj, tier)  # in-neighbors
+    out_ell, out_hub_edges, out_hub_seg = build_ell_and_hubs(adj, tier)
+    te_src, te_dst = build_flat_edges(adj, tier)
+
+    outdeg_inv = np.zeros((tier.v,), dtype=np.float64)
+    valid = np.zeros((tier.v,), dtype=np.float64)
+    for v in range(n):
+        outdeg_inv[v] = 1.0 / len(adj[v])
+        valid[v] = 1.0
+
+    return {
+        "ell_idx": ell_idx,
+        "hub_edges": hub_edges,
+        "hub_seg": hub_seg,
+        "out_ell_idx": out_ell,
+        "out_hub_edges": out_hub_edges,
+        "out_hub_seg": out_hub_seg,
+        "te_src": te_src,
+        "te_dst": te_dst,
+        "outdeg_inv": outdeg_inv,
+        "valid": valid,
+        "inv_n": np.array([1.0 / n], dtype=np.float64),
+    }
+
+
+def pad_vec(x: np.ndarray, v_cap: int, dtype=np.float64) -> np.ndarray:
+    out = np.zeros((v_cap,), dtype=dtype)
+    out[: x.shape[0]] = x
+    return out

@@ -1,0 +1,48 @@
+"""L1 kernels (build-time only; lowered into the L2 HLO artifacts).
+
+Two interchangeable implementations of the same interface:
+
+- ``pallas``: the TPU-structural Pallas kernels (``ell.py``, ``norms.py``,
+  ``onehot.py``) -- interpret=True, correctness-checked against ``ref.py``.
+- ``fused``: the XLA-fused equivalents baked into production artifacts on
+  the CPU-PJRT simulated GPU (see ``fused.py`` for why).
+
+``get_impl(name)`` returns a namespace with ``ell_block_sum``,
+``ell_block_max`` and ``linf_delta``.
+"""
+
+import types
+
+from . import fused
+from .ell import ell_block_sum, ell_block_max
+from .norms import linf_delta
+from .onehot import onehot_segment_sum
+
+_PALLAS = types.SimpleNamespace(
+    ell_block_sum=ell_block_sum,
+    ell_block_max=ell_block_max,
+    linf_delta=linf_delta,
+)
+_FUSED = types.SimpleNamespace(
+    ell_block_sum=fused.ell_block_sum,
+    ell_block_max=fused.ell_block_max,
+    linf_delta=fused.linf_delta,
+)
+
+
+def get_impl(name: str):
+    if name == "pallas":
+        return _PALLAS
+    if name == "fused":
+        return _FUSED
+    raise ValueError(f"unknown kernel impl {name!r}")
+
+
+__all__ = [
+    "ell_block_sum",
+    "ell_block_max",
+    "linf_delta",
+    "onehot_segment_sum",
+    "get_impl",
+    "fused",
+]

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: blocked ELL gather-reduce.
+
+This is the compute hot-spot of the paper, re-thought for a TPU-style
+machine (see DESIGN.md §Hardware-Adaptation):
+
+- the paper's CUDA *thread-per-vertex* kernel (low in-degree vertices)
+  becomes ``ell_block_sum(contrib, ell_idx[V, W])``: a tile of ``BLOCK_ROWS``
+  vertices is processed per grid step, each row's W neighbor slots gathered
+  and reduced across vector lanes — no divergence, one store per vertex.
+- the paper's CUDA *block-per-vertex* kernel (high in-degree vertices) is the
+  same kernel over the hub chunk matrix ``hub_edges[NC, C]``: each row is one
+  VMEM-sized chunk of a single hub's neighbor list ("strided block
+  reduction"), reduced to a partial sum; the per-hub combine is a tiny
+  segment-sum done in L2.
+
+``interpret=True`` is mandatory: the artifacts must run on the CPU PJRT
+backend (real-TPU lowering emits Mosaic custom-calls the CPU plugin cannot
+execute). The BlockSpec structure below is what a real TPU deployment would
+tile into VMEM; DESIGN.md §Perf estimates its VMEM footprint.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: rows of the ELL/chunk matrix processed per grid step. With W == 16 and
+#: f64 ranks, one tile is BLOCK_ROWS×W×4 B of indices + BLOCK_ROWS×W×8 B of
+#: gathered contributions + the resident contrib slice — comfortably inside
+#: a 16 MiB VMEM budget at 256 rows.
+BLOCK_ROWS = 256
+
+
+def _reduce_kernel(contrib_ref, idx_ref, o_ref, *, op):
+    """One grid step: gather a [rows, width] tile of contributions, reduce
+    across the width (lane) axis, store one value per row."""
+    contrib = contrib_ref[...]  # full contribution vector (HBM->VMEM slice)
+    idx = idx_ref[...]  # [rows, width] neighbor ids for this tile
+    vals = contrib[idx.reshape(-1)].reshape(idx.shape)
+    if op == "sum":
+        o_ref[...] = jnp.sum(vals, axis=1)
+    elif op == "max":
+        o_ref[...] = jnp.max(vals, axis=1)
+    else:  # pragma: no cover
+        raise ValueError(op)
+
+
+def _ell_block_reduce(contrib: jax.Array, idx: jax.Array, op: str) -> jax.Array:
+    n, w = idx.shape
+    rows = min(BLOCK_ROWS, n)
+    assert n % rows == 0, f"ELL rows {n} not divisible by tile {rows}"
+    return pl.pallas_call(
+        functools.partial(_reduce_kernel, op=op),
+        grid=(n // rows,),
+        in_specs=[
+            pl.BlockSpec(contrib.shape, lambda i: (0,)),  # whole contrib vec
+            pl.BlockSpec((rows, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), contrib.dtype),
+        interpret=True,
+    )(contrib, idx)
+
+
+def ell_block_sum(contrib: jax.Array, idx: jax.Array) -> jax.Array:
+    """Per-row sum of ``contrib[idx]``. ``contrib: f64[V]``, ``idx: i32[N, W]``
+    (sentinel-padded; the sentinel's contribution must be 0) -> ``f64[N]``."""
+    return _ell_block_reduce(contrib, idx, "sum")
+
+
+def ell_block_max(flags: jax.Array, idx: jax.Array) -> jax.Array:
+    """Per-row max of ``flags[idx]`` — the pull (gather) form of frontier
+    expansion: vertex v becomes affected iff any in-neighbor has its
+    "mark my out-neighbors" flag set. Atomics-free, one write per vertex."""
+    return _ell_block_reduce(flags, idx, "max")

@@ -1,0 +1,27 @@
+"""XLA-fused counterparts of the Pallas kernels (same math, same interface).
+
+Why both exist: the Pallas kernels in ``ell.py``/``norms.py`` are the L1
+artifact for a real TPU — their ``interpret=True`` CPU emulation, however,
+executes gathers ~50x slower than the identical XLA-fused expression (each
+grid step re-materializes refs; measured in EXPERIMENTS.md §Perf). Since the
+CPU PJRT backend *is* our simulated GPU, the production artifacts bake these
+fused forms, which lower to exactly the gather/reduce/scatter HLO a Mosaic
+compilation of the Pallas kernels would produce. pytest asserts the two
+implementations agree bit-for-bit on random inputs, and ``aot.py
+--impl pallas`` can bake the Pallas path instead for structural validation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_block_sum(contrib: jax.Array, idx: jax.Array) -> jax.Array:
+    return contrib[idx].sum(axis=1)
+
+
+def ell_block_max(flags: jax.Array, idx: jax.Array) -> jax.Array:
+    return flags[idx].max(axis=1)
+
+
+def linf_delta(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.max(jnp.abs(a - b))[None]

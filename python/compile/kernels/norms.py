@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: two-phase L-infinity norm of a rank delta.
+
+Mirrors the paper's convergence detection (Section 4.1): a first kernel
+computes the block-wise max of |R_new - R| and a second reduces the per-block
+results. Here both phases live in one Pallas program: the grid walks blocks
+of the rank vectors and max-accumulates into a single-element output block
+(grid steps execute in order, so revisiting the output block is a reduction,
+exactly like the paper's second kernel over the temporary buffer).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _linf_kernel(a_ref, b_ref, o_ref):
+    i = pl.program_id(0)
+    m = jnp.max(jnp.abs(a_ref[...] - b_ref[...]))
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0] = m
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[0] = jnp.maximum(o_ref[0], m)
+
+
+def linf_delta(a: jax.Array, b: jax.Array) -> jax.Array:
+    """max_v |a[v] - b[v]| as an f64[1] array (shape kept rank-1 so the Rust
+    side reads a plain vector)."""
+    (n,) = a.shape
+    block = min(BLOCK, n)
+    assert n % block == 0
+    return pl.pallas_call(
+        _linf_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), a.dtype),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel (ablation): one-hot MXU segmented reduction for hub edges.
+
+An alternative "block-per-vertex" adaptation: instead of per-hub chunk rows
+(kernels/ell.py over ``hub_edges``), the hub edge list is kept flat and each
+chunk's contributions are reduced into per-segment partials with a one-hot
+matmul — on a real TPU this maps the irregular reduction onto the MXU
+systolic array. It is quadratic in the number of segments per chunk, so it
+only pays off when the hub count is small; the production artifacts use the
+chunk-row formulation, and ``benches``/pytest compare the two
+(EXPERIMENTS.md §Perf, kernel ablation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 256
+
+
+def _onehot_kernel(contrib_ref, src_ref, seg_ref, o_ref, *, num_segments):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    contrib = contrib_ref[...]
+    vals = contrib[src_ref[...]]  # [chunk]
+    seg = seg_ref[...]  # [chunk]
+    onehot = (seg[:, None] == jnp.arange(num_segments)[None, :]).astype(
+        contrib.dtype
+    )
+    # [chunk] x [chunk, S] -> [S]: the MXU-friendly segmented reduction.
+    o_ref[...] += vals @ onehot
+
+
+def onehot_segment_sum(
+    contrib: jax.Array, src: jax.Array, seg: jax.Array, num_segments: int
+) -> jax.Array:
+    """sum of ``contrib[src[e]]`` into segment ``seg[e]``; padding edges must
+    point ``src`` at the sentinel (contribution 0). Returns f64[num_segments].
+    """
+    (e,) = src.shape
+    chunk = min(CHUNK, e)
+    assert e % chunk == 0
+    return pl.pallas_call(
+        functools.partial(_onehot_kernel, num_segments=num_segments),
+        grid=(e // chunk,),
+        in_specs=[
+            pl.BlockSpec(contrib.shape, lambda i: (0,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_segments,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_segments,), contrib.dtype),
+        interpret=True,
+    )(contrib, src, seg)

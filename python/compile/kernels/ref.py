@@ -1,0 +1,173 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels and the PageRank step.
+
+Everything the kernels and L2 model compute has a dense, obviously-correct
+counterpart here; pytest (with hypothesis sweeps) asserts allclose between
+the two. ``naive_pagerank`` is additionally the end-to-end rank oracle used
+by both the python and (via golden files) the Rust test suites.
+"""
+
+import numpy as np
+
+ALPHA = 0.85
+TAU = 1e-10
+TAU_FRONTIER = 1e-6
+TAU_PRUNE = 1e-6
+MAX_ITERATIONS = 500
+
+
+# --- kernel oracles -------------------------------------------------------
+
+
+def ell_sum_ref(contrib: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    return contrib[idx].sum(axis=1)
+
+
+def ell_max_ref(flags: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    return flags[idx].max(axis=1)
+
+
+def linf_ref(a: np.ndarray, b: np.ndarray) -> float:
+    return float(np.abs(a - b).max())
+
+
+def segment_sum_ref(vals: np.ndarray, seg: np.ndarray, num_segments: int):
+    out = np.zeros((num_segments,), dtype=vals.dtype)
+    np.add.at(out, seg, vals)
+    return out
+
+
+# --- PageRank step oracle (adjacency-list semantics) ----------------------
+
+
+def incoming_contrib_ref(r: np.ndarray, adj: list[list[int]]) -> np.ndarray:
+    """c[v] = sum over in-neighbors u of r[u]/outdeg(u), computed by a plain
+    push loop over the out-adjacency."""
+    n = len(adj)
+    c = np.zeros((n,), dtype=np.float64)
+    for u, vs in enumerate(adj):
+        if not vs:
+            continue
+        share = r[u] / len(vs)
+        for v in vs:
+            c[v] += share
+    return c
+
+
+def step_ref(
+    r: np.ndarray,
+    adj: list[list[int]],
+    *,
+    mode: str = "plain",
+    aff: np.ndarray | None = None,
+    alpha: float = ALPHA,
+    tau_f: float = TAU_FRONTIER,
+    tau_p: float = TAU_PRUNE,
+):
+    """One synchronous PageRank iteration per the paper's Algorithm 3.
+
+    Returns ``(r_new, aff_out, delta_n, linf)``. ``mode`` in
+    {"plain", "dt", "df", "dfp"}; plain ignores ``aff``.
+    """
+    n = len(adj)
+    c = incoming_contrib_ref(r, adj)
+    c0 = (1.0 - alpha) / n
+    outdeg = np.array([len(vs) for vs in adj], dtype=np.float64)
+
+    if mode == "dfp":
+        # Eq. 2: closed-loop formula absorbing the self-loop.
+        k = c - r / outdeg
+        cand = (alpha * k + c0) / (1.0 - alpha / outdeg)
+    else:
+        cand = c0 + alpha * c  # Eq. 1
+
+    if mode == "plain":
+        r_new = cand
+        aff_out = None
+        delta_n = None
+    else:
+        assert aff is not None
+        mask = aff > 0
+        r_new = np.where(mask, cand, r)
+        denom = np.maximum(r_new, r)
+        rel = np.where(denom > 0, np.abs(r_new - r) / denom, 0.0)
+        delta_n = (mask & (rel > tau_f)).astype(np.float64)
+        aff_out = aff.copy()
+        if mode == "dfp":
+            aff_out = np.where(mask & (rel <= tau_p), 0.0, aff_out)
+
+    linf = float(np.abs(r_new - r).max())
+    return r_new, aff_out, delta_n, linf
+
+
+def expand_ref(dv: np.ndarray, dn: np.ndarray, adj: list[list[int]]):
+    """Mark out-neighbors of every vertex with dn set (Algorithm 5)."""
+    out = dv.copy()
+    for u, vs in enumerate(adj):
+        if dn[u] > 0:
+            for v in vs:
+                out[v] = 1.0
+    return out
+
+
+def initial_affected_ref(n: int, deletions, insertions):
+    """Algorithm 5 initialAffected: returns (dv, dn) f64[n] flags."""
+    dv = np.zeros((n,), dtype=np.float64)
+    dn = np.zeros((n,), dtype=np.float64)
+    for u, v in deletions:
+        dn[u] = 1.0
+        dv[v] = 1.0
+    for u, _v in insertions:
+        dn[u] = 1.0
+    return dv, dn
+
+
+# --- end-to-end oracles ---------------------------------------------------
+
+
+def naive_pagerank(
+    adj: list[list[int]],
+    *,
+    r0: np.ndarray | None = None,
+    alpha: float = ALPHA,
+    tau: float = TAU,
+    max_iter: int = MAX_ITERATIONS,
+) -> tuple[np.ndarray, int]:
+    """Synchronous pull power iteration; reference for Static/ND ranks."""
+    n = len(adj)
+    r = np.full((n,), 1.0 / n) if r0 is None else r0.astype(np.float64).copy()
+    for it in range(max_iter):
+        r_new, _, _, linf = step_ref(r, adj, mode="plain", alpha=alpha)
+        r = r_new
+        if linf <= tau:
+            return r, it + 1
+    return r, max_iter
+
+
+def dynamic_frontier_pagerank(
+    adj: list[list[int]],
+    r0: np.ndarray,
+    deletions,
+    insertions,
+    *,
+    prune: bool,
+    alpha: float = ALPHA,
+    tau: float = TAU,
+    tau_f: float = TAU_FRONTIER,
+    tau_p: float = TAU_PRUNE,
+    max_iter: int = MAX_ITERATIONS,
+) -> tuple[np.ndarray, int]:
+    """Reference DF / DF-P on the *updated* graph ``adj`` (Algorithm 2)."""
+    n = len(adj)
+    mode = "dfp" if prune else "df"
+    dv, dn = initial_affected_ref(n, deletions, insertions)
+    dv = expand_ref(dv, dn, adj)
+    r = r0.astype(np.float64).copy()
+    for it in range(max_iter):
+        r_new, dv, dn, linf = step_ref(
+            r, adj, mode=mode, aff=dv, alpha=alpha, tau_f=tau_f, tau_p=tau_p
+        )
+        r = r_new
+        if linf <= tau:
+            return r, it + 1
+        dv = expand_ref(dv, dn, adj)
+    return r, max_iter

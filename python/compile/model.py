@@ -1,0 +1,528 @@
+"""L2: one PageRank iteration (and frontier expansion) as pure JAX functions.
+
+Each function here is shape-specialized to a :class:`~compile.formats.Tier`
+and is AOT-lowered by ``aot.py`` to an HLO-text artifact that the Rust
+coordinator executes via PJRT. The L1 kernels (``kernels/``) are called from
+these functions so they lower into the same HLO; ``impl`` selects the Pallas
+or the XLA-fused kernel implementation (see ``kernels/fused.py``).
+
+Artifact variants (see DESIGN.md §7 and the paper's Algorithms 1-3, 5):
+
+- ``step_plain``  — Eq. 1 over all vertices (Static and Naive-dynamic).
+- ``step_dt``     — Eq. 1 restricted to a fixed affected mask (Dynamic
+                    Traversal).
+- ``step_df``     — Eq. 1 over the affected set + frontier marking (DF).
+- ``step_dfp``    — Eq. 2 (closed-loop self-loop formula) + frontier marking
+                    + pruning (DF-P).
+- ``step_df_wl`` / ``step_dfp_wl`` — worklist-compacted variants: the
+                    affected vertex ids (and affected hub chunk rows) arrive
+                    as fixed-capacity index vectors, so gather work scales
+                    with the frontier instead of |V| — the fixed-shape analog
+                    of the GPU's per-vertex ``if not affected: continue``.
+- ``step_df_nopart`` / ``step_dfp_nopart`` — "Don't Partition" ablation:
+                    contributions via a flat edge-list segment sum instead of
+                    the partitioned ELL + hub-chunk kernel pair (Figure 1).
+- ``expand_pull``    — frontier expansion as an atomics-free gather over the
+                    in-ELL/hub structure (our TPU-friendly adaptation).
+- ``expand_scatter`` — the paper's push form, partitioned by out-degree.
+- ``expand_scatter_wl`` — worklist-compacted push expansion.
+- ``expand_flat``    — unpartitioned push over the flat edge list (ablation).
+
+All tolerances/constants are baked at lowering time (paper §5.1.2):
+alpha=0.85, tau_f=tau_p=1e-6. The iteration tolerance check happens in Rust
+on the returned L-infinity delta.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .formats import Tier
+
+jax.config.update("jax_enable_x64", True)
+
+ALPHA = 0.85
+TAU_FRONTIER = 1e-6
+TAU_PRUNE = 1e-6
+
+F64 = jnp.float64
+I32 = jnp.int32
+
+#: worklist capacity = V / WL_DIV (and NC / WL_DIV chunk rows). Rust falls
+#: back to the full-shape step whenever the frontier outgrows this.
+WL_DIV = 16
+
+
+# --- shared pieces --------------------------------------------------------
+
+
+def _incoming_partitioned(k, contrib, ell_idx, hub_edges, hub_seg, v_cap):
+    """c[v] = sum_{u in G.in(v)} contrib[u] via the paper's two-kernel split:
+    low in-degree rows through the ELL kernel ("thread-per-vertex"), hub
+    chunks through the same kernel + a segment combine ("block-per-vertex").
+    """
+    c_low = k.ell_block_sum(contrib, ell_idx)  # [V]
+    partials = k.ell_block_sum(contrib, hub_edges)  # [NC]
+    c_hub = jax.ops.segment_sum(partials, hub_seg, num_segments=v_cap)
+    return c_low + c_hub
+
+
+def _incoming_flat(contrib, te_src, te_dst, v_cap):
+    """Unpartitioned ("Don't Partition") contribution sum: one edge-parallel
+    segmented reduction over the flat edge list."""
+    return jax.ops.segment_sum(contrib[te_src], te_dst, num_segments=v_cap)
+
+
+def _rank_candidate(r, c, outdeg_inv, valid, inv_n, *, prune):
+    c0 = (1.0 - ALPHA) * inv_n[0]
+    if prune:
+        # Eq. 2: the self-loop contribution (present in c, since every vertex
+        # carries a self-loop edge) is moved to the closed form.
+        k = c - r * outdeg_inv
+        return valid * (ALPHA * k + c0) / (1.0 - ALPHA * outdeg_inv)
+    return valid * (c0 + ALPHA * c)  # Eq. 1
+
+
+def _finish_masked(k, r, cand, aff, *, prune):
+    """Frontier/prune bookkeeping shared by DF and DF-P (Algorithm 3)."""
+    mask = aff > 0
+    r_new = jnp.where(mask, cand, r)
+    denom = jnp.maximum(r_new, r)
+    rel = jnp.where(denom > 0, jnp.abs(r_new - r) / denom, 0.0)
+    delta_n = jnp.where(mask & (rel > TAU_FRONTIER), 1.0, 0.0)
+    if prune:
+        aff_out = jnp.where(mask & (rel <= TAU_PRUNE), 0.0, aff)
+    else:
+        aff_out = aff
+    linf = k.linf_delta(r_new, r)
+    return r_new, aff_out, delta_n, linf
+
+
+# --- step variants --------------------------------------------------------
+
+
+def make_step_plain(tier: Tier, impl: str = "fused"):
+    k = kernels.get_impl(impl)
+
+    def step_plain(r, outdeg_inv, valid, inv_n, ell_idx, hub_edges, hub_seg):
+        contrib = r * outdeg_inv
+        c = _incoming_partitioned(k, contrib, ell_idx, hub_edges, hub_seg, tier.v)
+        r_new = _rank_candidate(r, c, outdeg_inv, valid, inv_n, prune=False)
+        linf = k.linf_delta(r_new, r)
+        return r_new, linf
+
+    return step_plain
+
+
+def make_step_dt(tier: Tier, impl: str = "fused"):
+    k = kernels.get_impl(impl)
+
+    def step_dt(r, outdeg_inv, valid, inv_n, ell_idx, hub_edges, hub_seg, aff):
+        contrib = r * outdeg_inv
+        c = _incoming_partitioned(k, contrib, ell_idx, hub_edges, hub_seg, tier.v)
+        cand = _rank_candidate(r, c, outdeg_inv, valid, inv_n, prune=False)
+        r_new = jnp.where(aff > 0, cand, r)
+        linf = k.linf_delta(r_new, r)
+        return r_new, linf
+
+    return step_dt
+
+
+def make_step_df(tier: Tier, *, prune: bool, partitioned: bool = True,
+                 impl: str = "fused"):
+    k = kernels.get_impl(impl)
+
+    if partitioned:
+
+        def step(r, outdeg_inv, valid, inv_n, ell_idx, hub_edges, hub_seg, aff):
+            contrib = r * outdeg_inv
+            c = _incoming_partitioned(
+                k, contrib, ell_idx, hub_edges, hub_seg, tier.v
+            )
+            cand = _rank_candidate(r, c, outdeg_inv, valid, inv_n, prune=prune)
+            return _finish_masked(k, r, cand, aff, prune=prune)
+
+    else:
+
+        def step(r, outdeg_inv, valid, inv_n, te_src, te_dst, aff):
+            contrib = r * outdeg_inv
+            c = _incoming_flat(contrib, te_src, te_dst, tier.v)
+            cand = _rank_candidate(r, c, outdeg_inv, valid, inv_n, prune=prune)
+            return _finish_masked(k, r, cand, aff, prune=prune)
+
+    return step
+
+
+def make_step_df_wl(tier: Tier, *, prune: bool, impl: str = "fused"):
+    """Worklist-compacted DF/DF-P step: only the (<= V/WL_DIV) affected
+    vertices' ELL rows and (<= NC/WL_DIV) affected hub chunk rows are
+    gathered. ``wl`` entries must cover every vertex with aff=1 (padding =
+    sentinel, whose ELL row is all-sentinel); ``wl_chunks`` every hub chunk
+    row whose segment vertex is affected (padding = NC-1, which the packer
+    keeps unused/sentinel)."""
+    k = kernels.get_impl(impl)
+    del k  # gather shapes here are worklist-sized; fused forms only.
+
+    def step(r, outdeg_inv, valid, inv_n, ell_idx, hub_edges, hub_seg, aff,
+             wl, wl_chunks):
+        contrib = r * outdeg_inv
+        rows = ell_idx[wl]  # [K, W]
+        c_rows = contrib[rows].sum(axis=1)  # [K]
+        ch = hub_edges[wl_chunks]  # [KC, C]
+        partials = contrib[ch].sum(axis=1)  # [KC]
+        c = jnp.zeros((tier.v,), dtype=jnp.float64).at[wl].add(c_rows)
+        c = c.at[hub_seg[wl_chunks]].add(partials)
+        cand = _rank_candidate(r, c, outdeg_inv, valid, inv_n, prune=prune)
+        fused_k = kernels.get_impl("fused")
+        return _finish_masked(fused_k, r, cand, aff, prune=prune)
+
+    return step
+
+
+# --- frontier expansion variants ------------------------------------------
+
+
+def make_expand_pull(tier: Tier, impl: str = "fused"):
+    """dv'[v] = dv[v] or (exists u in G.in(v) with dn[u]) — gather form, one
+    write per vertex, no scatter contention. Uses the same in-side ELL/hub
+    arrays as rank computation (work proportional to in-degree)."""
+    k = kernels.get_impl(impl)
+
+    def expand_pull(dv, dn, ell_idx, hub_edges, hub_seg):
+        m_low = k.ell_block_max(dn, ell_idx)  # [V]
+        partials = k.ell_block_max(dn, hub_edges)  # [NC]
+        m_hub = jax.ops.segment_max(partials, hub_seg, num_segments=tier.v)
+        m_hub = jnp.maximum(m_hub, 0.0)  # empty segments come back as -inf
+        return jnp.maximum(dv, jnp.maximum(m_low, m_hub))
+
+    return expand_pull
+
+
+def make_expand_scatter(tier: Tier):
+    """The paper's push form (Algorithm 5), partitioned by out-degree: low
+    out-degree rows scatter their flag to <=W out-neighbors; hub chunks
+    scatter per-chunk. Scatter-max over possibly-duplicate targets models the
+    paper's benign write races."""
+
+    def expand_scatter(dv, dn, out_ell_idx, out_hub_edges, out_hub_seg):
+        dv, dn = jnp.asarray(dv), jnp.asarray(dn)
+        flags_rows = jnp.broadcast_to(dn[:, None], out_ell_idx.shape)
+        out = dv.at[out_ell_idx.reshape(-1)].max(flags_rows.reshape(-1))
+        hub_flags = jnp.broadcast_to(
+            dn[out_hub_seg][:, None], out_hub_edges.shape
+        )
+        out = out.at[out_hub_edges.reshape(-1)].max(hub_flags.reshape(-1))
+        return out
+
+    return expand_scatter
+
+
+def make_expand_scatter_wl(tier: Tier):
+    """Worklist-compacted push expansion: only the ELL rows / hub chunks of
+    vertices with dn=1 are touched."""
+
+    def expand_scatter_wl(dv, dn, out_ell_idx, out_hub_edges, out_hub_seg,
+                          wl, wl_chunks):
+        dv, dn = jnp.asarray(dv), jnp.asarray(dn)
+        rows = out_ell_idx[wl]  # [K, W]
+        flags = jnp.broadcast_to(dn[wl][:, None], rows.shape)
+        out = dv.at[rows.reshape(-1)].max(flags.reshape(-1))
+        ch = out_hub_edges[wl_chunks]  # [KC, C]
+        cf = jnp.broadcast_to(dn[out_hub_seg[wl_chunks]][:, None], ch.shape)
+        out = out.at[ch.reshape(-1)].max(cf.reshape(-1))
+        return out
+
+    return expand_scatter_wl
+
+
+def make_expand_flat(tier: Tier):
+    """Unpartitioned push over the flat edge list ("Don't Partition")."""
+
+    def expand_flat(dv, dn, te_src, te_dst):
+        dv, dn = jnp.asarray(dv), jnp.asarray(dn)
+        return dv.at[te_dst].max(dn[te_src])
+
+    return expand_flat
+
+
+# --- standalone L1 kernel artifacts (Pallas path, integration-tested) ------
+
+
+def make_kernel_ell_sum(tier: Tier):
+    def kernel_ell_sum(contrib, ell_idx):
+        return kernels.ell_block_sum(contrib, ell_idx)
+
+    return kernel_ell_sum
+
+
+def make_kernel_linf(tier: Tier):
+    def kernel_linf(a, b):
+        return kernels.linf_delta(a, b)
+
+    return kernel_linf
+
+
+# --- artifact registry -----------------------------------------------------
+
+
+# --- packed (single-output) artifact wrappers -------------------------------
+#
+# The Rust runtime chains PJRT *buffers* between launches (device-resident
+# loop). The xla crate cannot split tuple-shaped output buffers, so every
+# production artifact takes and returns ONE packed f64 state vector:
+#
+#   state1 = [r | linf]              (V+1,)   — plain / dt steps
+#   state3 = [r | aff | dn | linf]   (3V+1,)  — df / dfp steps + expansion
+#
+# plus tiny ``peek_*`` programs that slice out the convergence scalar (or the
+# flag segments, for worklist construction) so the per-iteration host
+# transfer is 8 bytes instead of the whole state.
+
+
+def _unpack1(state, v):
+    return state[:v]
+
+
+def _unpack3(state, v):
+    return state[:v], state[v : 2 * v], state[2 * v : 3 * v]
+
+
+def make_step_plain_packed(tier: Tier, impl: str = "fused"):
+    inner = make_step_plain(tier, impl)
+    v = tier.v
+
+    def step(state, outdeg_inv, valid, inv_n, ell_idx, hub_edges, hub_seg):
+        r = _unpack1(state, v)
+        r2, linf = inner(r, outdeg_inv, valid, inv_n, ell_idx, hub_edges, hub_seg)
+        return jnp.concatenate([r2, linf])
+
+    return step
+
+
+def make_step_dt_packed(tier: Tier, impl: str = "fused"):
+    inner = make_step_dt(tier, impl)
+    v = tier.v
+
+    def step(state, outdeg_inv, valid, inv_n, ell_idx, hub_edges, hub_seg, aff):
+        r = _unpack1(state, v)
+        r2, linf = inner(r, outdeg_inv, valid, inv_n, ell_idx, hub_edges, hub_seg, aff)
+        return jnp.concatenate([r2, linf])
+
+    return step
+
+
+def make_step_df_packed(tier: Tier, *, prune: bool, partitioned: bool = True,
+                        impl: str = "fused"):
+    inner = make_step_df(tier, prune=prune, partitioned=partitioned, impl=impl)
+    v = tier.v
+
+    if partitioned:
+
+        def step(state, outdeg_inv, valid, inv_n, ell_idx, hub_edges, hub_seg):
+            r, aff, _dn = _unpack3(state, v)
+            r2, aff2, dn2, linf = inner(
+                r, outdeg_inv, valid, inv_n, ell_idx, hub_edges, hub_seg, aff
+            )
+            return jnp.concatenate([r2, aff2, dn2, linf])
+
+    else:
+
+        def step(state, outdeg_inv, valid, inv_n, te_src, te_dst):
+            r, aff, _dn = _unpack3(state, v)
+            r2, aff2, dn2, linf = inner(
+                r, outdeg_inv, valid, inv_n, te_src, te_dst, aff
+            )
+            return jnp.concatenate([r2, aff2, dn2, linf])
+
+    return step
+
+
+def make_step_df_wl_packed(tier: Tier, *, prune: bool, impl: str = "fused"):
+    inner = make_step_df_wl(tier, prune=prune, impl=impl)
+    v = tier.v
+
+    def step(state, outdeg_inv, valid, inv_n, ell_idx, hub_edges, hub_seg,
+             wl, wl_chunks):
+        r, aff, _dn = _unpack3(state, v)
+        r2, aff2, dn2, linf = inner(
+            r, outdeg_inv, valid, inv_n, ell_idx, hub_edges, hub_seg, aff,
+            wl, wl_chunks,
+        )
+        return jnp.concatenate([r2, aff2, dn2, linf])
+
+    return step
+
+
+def _repack_expand(state, v, aff2):
+    # r, dn and linf pass through; only the affected flags change.
+    return jnp.concatenate([state[:v], aff2, state[2 * v :]])
+
+
+def make_expand_pull_packed(tier: Tier, impl: str = "fused"):
+    inner = make_expand_pull(tier, impl)
+    v = tier.v
+
+    def expand(state, ell_idx, hub_edges, hub_seg):
+        _r, aff, dn = _unpack3(state, v)
+        return _repack_expand(state, v, inner(aff, dn, ell_idx, hub_edges, hub_seg))
+
+    return expand
+
+
+def make_expand_scatter_packed(tier: Tier):
+    inner = make_expand_scatter(tier)
+    v = tier.v
+
+    def expand(state, out_ell_idx, out_hub_edges, out_hub_seg):
+        _r, aff, dn = _unpack3(state, v)
+        return _repack_expand(
+            state, v, inner(aff, dn, out_ell_idx, out_hub_edges, out_hub_seg)
+        )
+
+    return expand
+
+
+def make_expand_scatter_wl_packed(tier: Tier):
+    inner = make_expand_scatter_wl(tier)
+    v = tier.v
+
+    def expand(state, out_ell_idx, out_hub_edges, out_hub_seg, wl, wl_chunks):
+        _r, aff, dn = _unpack3(state, v)
+        return _repack_expand(
+            state, v,
+            inner(aff, dn, out_ell_idx, out_hub_edges, out_hub_seg, wl, wl_chunks),
+        )
+
+    return expand
+
+
+def make_expand_flat_packed(tier: Tier):
+    inner = make_expand_flat(tier)
+    v = tier.v
+
+    def expand(state, te_src, te_dst):
+        _r, aff, dn = _unpack3(state, v)
+        return _repack_expand(state, v, inner(aff, dn, te_src, te_dst))
+
+    return expand
+
+
+def make_peek_last(tier: Tier, state_len: int):
+    def peek(state):
+        return state[state_len - 1 : state_len]
+
+    return peek
+
+
+def make_peek_aff_dn(tier: Tier):
+    v = tier.v
+
+    def peek(state):
+        return state[v : 3 * v]
+
+    return peek
+
+
+def artifact_specs(tier: Tier, impl: str = "fused"):
+    """Every artifact for a tier: name -> (fn, inputs, output_names).
+
+    All programs return a single packed array (see the packed-wrapper
+    section above); the input order is the execute() argument order on the
+    Rust side and is recorded in the manifest.
+    """
+    v, w, c, nc, ecap = tier.v, tier.w, tier.c, tier.nc, tier.ecap
+    kcap, kc_cap = tier.wl_cap, tier.wl_chunk_cap
+    state1 = ("state", (v + 1,), F64)
+    state3 = ("state", (3 * v + 1,), F64)
+    odi = ("outdeg_inv", (v,), F64)
+    valid = ("valid", (v,), F64)
+    inv_n = ("inv_n", (1,), F64)
+    ell = ("ell_idx", (v, w), I32)
+    hub_e = ("hub_edges", (nc, c), I32)
+    hub_s = ("hub_seg", (nc,), I32)
+    oell = ("out_ell_idx", (v, w), I32)
+    ohub_e = ("out_hub_edges", (nc, c), I32)
+    ohub_s = ("out_hub_seg", (nc,), I32)
+    tsrc = ("te_src", (ecap,), I32)
+    tdst = ("te_dst", (ecap,), I32)
+    aff = ("aff", (v,), F64)
+    wl = ("wl", (kcap,), I32)
+    wlc = ("wl_chunks", (kc_cap,), I32)
+
+    part_graph = [ell, hub_e, hub_s]
+    return {
+        "step_plain": (
+            make_step_plain_packed(tier, impl),
+            [state1, odi, valid, inv_n, *part_graph],
+            ["state"],
+        ),
+        "step_dt": (
+            make_step_dt_packed(tier, impl),
+            [state1, odi, valid, inv_n, *part_graph, aff],
+            ["state"],
+        ),
+        "step_df": (
+            make_step_df_packed(tier, prune=False, impl=impl),
+            [state3, odi, valid, inv_n, *part_graph],
+            ["state"],
+        ),
+        "step_dfp": (
+            make_step_df_packed(tier, prune=True, impl=impl),
+            [state3, odi, valid, inv_n, *part_graph],
+            ["state"],
+        ),
+        "step_df_wl": (
+            make_step_df_wl_packed(tier, prune=False, impl=impl),
+            [state3, odi, valid, inv_n, *part_graph, wl, wlc],
+            ["state"],
+        ),
+        "step_dfp_wl": (
+            make_step_df_wl_packed(tier, prune=True, impl=impl),
+            [state3, odi, valid, inv_n, *part_graph, wl, wlc],
+            ["state"],
+        ),
+        "step_df_nopart": (
+            make_step_df_packed(tier, prune=False, partitioned=False, impl=impl),
+            [state3, odi, valid, inv_n, tsrc, tdst],
+            ["state"],
+        ),
+        "step_dfp_nopart": (
+            make_step_df_packed(tier, prune=True, partitioned=False, impl=impl),
+            [state3, odi, valid, inv_n, tsrc, tdst],
+            ["state"],
+        ),
+        "expand_pull": (
+            make_expand_pull_packed(tier, impl),
+            [state3, *part_graph],
+            ["state"],
+        ),
+        "expand_scatter": (
+            make_expand_scatter_packed(tier),
+            [state3, oell, ohub_e, ohub_s],
+            ["state"],
+        ),
+        "expand_scatter_wl": (
+            make_expand_scatter_wl_packed(tier),
+            [state3, oell, ohub_e, ohub_s, wl, wlc],
+            ["state"],
+        ),
+        "expand_flat": (
+            make_expand_flat_packed(tier),
+            [state3, tsrc, tdst],
+            ["state"],
+        ),
+        "peek_linf1": (make_peek_last(tier, v + 1), [state1], ["linf"]),
+        "peek_linf3": (make_peek_last(tier, 3 * v + 1), [state3], ["linf"]),
+        "peek_aff_dn": (make_peek_aff_dn(tier), [state3], ["aff_dn"]),
+        # standalone Pallas kernel artifacts (integration smoke + micro-bench)
+        "kernel_ell_sum": (
+            make_kernel_ell_sum(tier),
+            [("contrib", (v,), F64), ell],
+            ["row_sums"],
+        ),
+        "kernel_linf": (
+            make_kernel_linf(tier),
+            [("a", (v,), F64), ("b", (v,), F64)],
+            ["linf"],
+        ),
+    }

@@ -1,0 +1,6 @@
+# Make the build-time `compile` package importable when pytest runs from the
+# repository root (the documented `pytest python/tests/` invocation).
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,43 @@
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+from compile import formats  # noqa: E402
+
+
+def random_graph(rng: np.random.Generator, n: int, avg_deg: float = 4.0):
+    """Random digraph with self-loops on every vertex (no dead ends)."""
+    adj: list[list[int]] = [[v] for v in range(n)]
+    m = int(avg_deg * n)
+    if m:
+        src = rng.integers(0, n, m)
+        dst = rng.integers(0, n, m)
+        seen = {(v, v) for v in range(n)}
+        for u, v in zip(src.tolist(), dst.tolist()):
+            if (u, v) not in seen:
+                seen.add((u, v))
+                adj[u].append(v)
+    return adj
+
+
+def random_hub_graph(rng: np.random.Generator, n: int):
+    """Graph guaranteed to exercise the hub (block-per-vertex) path: vertex 0
+    has in-degree > DEGREE_THRESHOLD."""
+    adj = random_graph(rng, n)
+    hub_in = rng.choice(n, size=min(n, formats.DEGREE_THRESHOLD * 2 + 3), replace=False)
+    for u in hub_in.tolist():
+        if 0 not in adj[u]:
+            adj[u].append(0)
+    return adj
+
+
+def pack(adj, tier=None):
+    tier = tier or formats.TIERS[0]
+    dev = formats.build_device_graph(adj, tier)
+    return tier, dev
+
+
+def pad_ranks(r, tier):
+    return formats.pad_vec(np.asarray(r, dtype=np.float64), tier.v)

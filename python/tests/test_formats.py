@@ -1,0 +1,148 @@
+"""Device-format builder invariants — the layout contract with Rust."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats
+from conftest import random_graph, random_hub_graph
+
+
+def _decode_in_neighbors(dev, tier, n):
+    """Reconstruct the in-adjacency from the packed ELL + hub chunks."""
+    sentinel = tier.v - 1
+    adj_in = [[] for _ in range(n)]
+    for v in range(n):
+        for u in dev["ell_idx"][v]:
+            if u != sentinel:
+                adj_in[v].append(int(u))
+    for row in range(tier.nc):
+        v = int(dev["hub_seg"][row])
+        if v == sentinel:
+            continue
+        for u in dev["hub_edges"][row]:
+            if u != sentinel:
+                adj_in[v].append(int(u))
+    return adj_in
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 200), seed=st.integers(0, 2**32 - 1))
+def test_pack_roundtrip(n, seed):
+    """ELL + hub chunks + flat edges all encode exactly the input graph."""
+    rng = np.random.default_rng(seed)
+    adj = random_hub_graph(rng, n) if n > 40 else random_graph(rng, n)
+    tier = formats.TIERS[0]
+    dev = formats.build_device_graph(adj, tier)
+
+    tadj = formats.transpose_adj(adj)
+    got_in = _decode_in_neighbors(dev, tier, n)
+    for v in range(n):
+        assert sorted(got_in[v]) == sorted(tadj[v])
+
+    # flat edge list matches the out-adjacency
+    sentinel = tier.v - 1
+    edges = [
+        (int(s), int(d))
+        for s, d in zip(dev["te_src"], dev["te_dst"])
+        if s != sentinel or d != sentinel
+    ]
+    want = [(u, v) for u, vs in enumerate(adj) for v in vs]
+    assert sorted(edges) == sorted(want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 150), seed=st.integers(0, 2**32 - 1))
+def test_pack_scalars(n, seed):
+    rng = np.random.default_rng(seed)
+    adj = random_graph(rng, n)
+    tier = formats.TIERS[0]
+    dev = formats.build_device_graph(adj, tier)
+    assert dev["inv_n"][0] == pytest.approx(1.0 / n)
+    np.testing.assert_array_equal(dev["valid"][:n], 1.0)
+    np.testing.assert_array_equal(dev["valid"][n:], 0.0)
+    for v in range(n):
+        assert dev["outdeg_inv"][v] == pytest.approx(1.0 / len(adj[v]))
+    np.testing.assert_array_equal(dev["outdeg_inv"][n:], 0.0)
+    # sentinel slot must never contribute
+    assert dev["outdeg_inv"][tier.v - 1] == 0.0
+
+
+def test_low_degree_rows_in_ell_hub_rows_empty():
+    """A pure ring (in-degree 2 incl. self-loop) uses no hub chunks."""
+    n = 64
+    adj = [[v, (v + 1) % n] for v in range(n)]
+    tier = formats.TIERS[0]
+    dev = formats.build_device_graph(adj, tier)
+    sentinel = tier.v - 1
+    assert (dev["hub_seg"] == sentinel).all()
+    assert (dev["hub_edges"] == sentinel).all()
+
+
+def test_hub_vertex_routed_to_chunks():
+    """in-degree > W vertices get all-sentinel ELL rows + chunk rows."""
+    n = 50
+    hub = 0
+    adj = [[v] for v in range(n)]
+    for u in range(1, n):
+        adj[u].append(hub)  # hub in-degree = n-1 + self = 50 > 16
+    tier = formats.TIERS[0]
+    dev = formats.build_device_graph(adj, tier)
+    sentinel = tier.v - 1
+    assert (dev["ell_idx"][hub] == sentinel).all()
+    rows = np.nonzero(dev["hub_seg"] == hub)[0]
+    assert len(rows) == int(np.ceil(n / tier.c))
+    packed = [int(u) for r in rows for u in dev["hub_edges"][r] if u != sentinel]
+    assert sorted(packed) == sorted(range(n))
+
+
+def test_last_chunk_row_reserved():
+    """Row NC-1 is the worklist sentinel target and must stay unused."""
+    rng = np.random.default_rng(3)
+    adj = random_hub_graph(rng, 120)
+    tier = formats.TIERS[0]
+    dev = formats.build_device_graph(adj, tier)
+    sentinel = tier.v - 1
+    assert dev["hub_seg"][tier.nc - 1] == sentinel
+    assert (dev["hub_edges"][tier.nc - 1] == sentinel).all()
+
+
+def test_dead_end_rejected():
+    adj = [[0, 1], []]  # vertex 1 is a dead end
+    with pytest.raises(AssertionError, match="dead end"):
+        formats.build_device_graph(adj, formats.TIERS[0])
+
+
+def test_capacity_rejected():
+    tier = formats.TIERS[0]
+    n = tier.v  # n > V-1
+    adj = [[v] for v in range(n)]
+    with pytest.raises(AssertionError):
+        formats.build_device_graph(adj, tier)
+
+
+def test_tier_selection():
+    assert formats.smallest_fitting_tier(100, 100).name == "t10"
+    assert formats.smallest_fitting_tier(2000, 100).name == "t12"
+    assert formats.smallest_fitting_tier(5000, 100).name == "t13"
+    assert formats.smallest_fitting_tier(100, 1 << 16).name == "t12"
+    assert formats.smallest_fitting_tier(100, (1 << 16) + 1).name == "t13"
+    assert formats.smallest_fitting_tier(1 << 20, 10) is None
+
+
+def test_out_side_mirrors_in_side():
+    """out_ell/out_hub encode the out-adjacency with the same conventions."""
+    rng = np.random.default_rng(11)
+    adj = random_hub_graph(rng, 90)
+    tier = formats.TIERS[0]
+    dev = formats.build_device_graph(adj, tier)
+    sentinel = tier.v - 1
+    got = [[] for _ in range(len(adj))]
+    for v in range(len(adj)):
+        got[v].extend(int(u) for u in dev["out_ell_idx"][v] if u != sentinel)
+    for row in range(tier.nc):
+        u = int(dev["out_hub_seg"][row])
+        if u != sentinel:
+            got[u].extend(int(x) for x in dev["out_hub_edges"][row] if x != sentinel)
+    for v in range(len(adj)):
+        assert sorted(got[v]) == sorted(adj[v])

@@ -1,0 +1,122 @@
+"""L1 kernel correctness: Pallas kernels vs the numpy oracle, and the
+XLA-fused implementations vs the Pallas ones (they must agree exactly —
+the production artifacts bake the fused forms)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import fused, ref
+
+DTYPES = [np.float64, np.float32]
+
+
+def _mk(rng, n_src, rows, width, dtype):
+    contrib = rng.random(n_src).astype(dtype)
+    idx = rng.integers(0, n_src, (rows, width)).astype(np.int32)
+    return contrib, idx
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_src=st.integers(8, 300),
+    rows=st.sampled_from([1, 2, 4, 8, 16, 64, 256, 512]),
+    width=st.integers(1, 24),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_ell_block_sum_matches_ref(n_src, rows, width, dtype, seed):
+    rng = np.random.default_rng(seed)
+    contrib, idx = _mk(rng, n_src, rows, width, dtype)
+    got = np.asarray(kernels.ell_block_sum(contrib, idx))
+    want = ref.ell_sum_ref(contrib, idx)
+    np.testing.assert_allclose(got, want, rtol=1e-6 if dtype == np.float32 else 1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_src=st.integers(8, 300),
+    rows=st.sampled_from([1, 4, 16, 256]),
+    width=st.integers(1, 24),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_ell_block_max_matches_ref(n_src, rows, width, seed):
+    rng = np.random.default_rng(seed)
+    flags = (rng.random(n_src) < 0.3).astype(np.float64)
+    idx = rng.integers(0, n_src, (rows, width)).astype(np.int32)
+    got = np.asarray(kernels.ell_block_max(flags, idx))
+    np.testing.assert_array_equal(got, ref.ell_max_ref(flags, idx))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.sampled_from([1, 2, 64, 1024, 4096]),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_linf_delta_matches_ref(n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.random(n).astype(dtype)
+    b = rng.random(n).astype(dtype)
+    got = np.asarray(kernels.linf_delta(a, b))
+    assert got.shape == (1,)
+    np.testing.assert_allclose(got[0], ref.linf_ref(a, b), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_src=st.integers(8, 200),
+    rows=st.sampled_from([4, 64, 256]),
+    width=st.integers(1, 20),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_fused_equals_pallas(n_src, rows, width, seed):
+    """The production (fused) kernels and the Pallas kernels are the same
+    function; sums may differ by reduction order only (~1 ulp)."""
+    rng = np.random.default_rng(seed)
+    contrib, idx = _mk(rng, n_src, rows, width, np.float64)
+    np.testing.assert_allclose(
+        np.asarray(fused.ell_block_sum(contrib, idx)),
+        np.asarray(kernels.ell_block_sum(contrib, idx)),
+        rtol=1e-14,
+    )
+    flags = (contrib > 0.5).astype(np.float64)
+    np.testing.assert_array_equal(
+        np.asarray(fused.ell_block_max(flags, idx)),
+        np.asarray(kernels.ell_block_max(flags, idx)),
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    e=st.sampled_from([16, 256, 512]),
+    n_seg=st.integers(2, 64),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_onehot_segment_sum_matches_ref(e, n_seg, seed):
+    rng = np.random.default_rng(seed)
+    n_src = 128
+    contrib = rng.random(n_src)
+    src = rng.integers(0, n_src, e).astype(np.int32)
+    seg = rng.integers(0, n_seg, e).astype(np.int32)
+    got = np.asarray(kernels.onehot_segment_sum(contrib, src, seg, n_seg))
+    want = ref.segment_sum_ref(contrib[src], seg, n_seg)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_sentinel_contribution_is_zero():
+    """Padding convention: gathering the sentinel slot must add exactly 0."""
+    contrib = np.array([0.5, 0.25, 0.0])  # sentinel = last slot
+    idx = np.array([[0, 2, 2, 2], [1, 0, 2, 2]], dtype=np.int32)
+    got = np.asarray(kernels.ell_block_sum(contrib, idx))
+    np.testing.assert_array_equal(got, [0.5, 0.75])
+
+
+@pytest.mark.parametrize("rows,width", [(256, 16), (1024, 16)])
+def test_tier_shaped_ell(rows, width):
+    """Exactly the shapes the artifacts use (t10 ELL / hub chunks)."""
+    rng = np.random.default_rng(7)
+    contrib, idx = _mk(rng, 1024, rows, width, np.float64)
+    got = np.asarray(kernels.ell_block_sum(contrib, idx))
+    np.testing.assert_allclose(got, ref.ell_sum_ref(contrib, idx), rtol=1e-12)

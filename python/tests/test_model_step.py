@@ -1,0 +1,263 @@
+"""L2 model vs the numpy step oracle: every step/expand artifact variant."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import formats, model
+from compile.kernels import ref
+from conftest import pack, pad_ranks, random_graph, random_hub_graph
+
+
+def _random_state(rng, n, tier):
+    r_small = rng.random(n)
+    r_small /= r_small.sum()
+    r = pad_ranks(r_small, tier)
+    aff = formats.pad_vec((rng.random(n) < 0.6).astype(np.float64), tier.v)
+    return r_small, r, aff
+
+
+def _graph_args(dev):
+    return dev["ell_idx"], dev["hub_edges"], dev["hub_seg"]
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 150), seed=st.integers(0, 2**32 - 1))
+def test_step_plain(n, seed):
+    rng = np.random.default_rng(seed)
+    adj = random_hub_graph(rng, n) if n > 40 else random_graph(rng, n)
+    tier, dev = pack(adj)
+    r_small, r, _ = _random_state(rng, n, tier)
+    step = model.make_step_plain(tier)
+    r_new, linf = step(
+        r, dev["outdeg_inv"], dev["valid"], dev["inv_n"], *_graph_args(dev)
+    )
+    want, _, _, linf_want = ref.step_ref(r_small, adj, mode="plain")
+    np.testing.assert_allclose(np.asarray(r_new)[:n], want, rtol=1e-12)
+    np.testing.assert_array_equal(np.asarray(r_new)[n:], 0.0)
+    assert np.isclose(float(linf[0]), linf_want, rtol=1e-9)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(3, 120),
+    seed=st.integers(0, 2**32 - 1),
+    mode=st.sampled_from(["dt", "df", "dfp"]),
+)
+def test_step_masked_variants(n, seed, mode):
+    rng = np.random.default_rng(seed)
+    adj = random_hub_graph(rng, n) if n > 40 else random_graph(rng, n)
+    tier, dev = pack(adj)
+    r_small, r, aff = _random_state(rng, n, tier)
+    aff_small = np.asarray(aff)[:n]
+
+    want, aff_want, dn_want, linf_want = ref.step_ref(
+        r_small, adj, mode=mode, aff=aff_small
+    )
+
+    if mode == "dt":
+        step = model.make_step_dt(tier)
+        r_new, linf = step(
+            r, dev["outdeg_inv"], dev["valid"], dev["inv_n"],
+            *_graph_args(dev), aff,
+        )
+    else:
+        step = model.make_step_df(tier, prune=(mode == "dfp"))
+        r_new, aff_out, delta_n, linf = step(
+            r, dev["outdeg_inv"], dev["valid"], dev["inv_n"],
+            *_graph_args(dev), aff,
+        )
+        np.testing.assert_array_equal(np.asarray(aff_out)[:n], aff_want)
+        np.testing.assert_array_equal(np.asarray(delta_n)[:n], dn_want)
+
+    np.testing.assert_allclose(np.asarray(r_new)[:n], want, rtol=1e-12)
+    assert np.isclose(float(linf[0]), linf_want, rtol=1e-9)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(3, 120),
+    seed=st.integers(0, 2**32 - 1),
+    prune=st.booleans(),
+)
+def test_step_nopart_equals_partitioned(n, seed, prune):
+    """Figure-1 ablation: both work distributions compute the same step."""
+    rng = np.random.default_rng(seed)
+    adj = random_hub_graph(rng, n) if n > 40 else random_graph(rng, n)
+    tier, dev = pack(adj)
+    _, r, aff = _random_state(rng, n, tier)
+
+    part = model.make_step_df(tier, prune=prune)
+    flat = model.make_step_df(tier, prune=prune, partitioned=False)
+    out_p = part(
+        r, dev["outdeg_inv"], dev["valid"], dev["inv_n"], *_graph_args(dev), aff
+    )
+    out_f = flat(
+        r, dev["outdeg_inv"], dev["valid"], dev["inv_n"],
+        dev["te_src"], dev["te_dst"], aff,
+    )
+    for a, b in zip(out_p, out_f):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-12)
+
+
+def _worklists(dev, aff, tier):
+    """Host-side worklist construction (mirrors rust/src/runtime/tier.rs)."""
+    sentinel = tier.v - 1
+    ids = np.nonzero(np.asarray(aff) > 0)[0]
+    wl = np.full((tier.wl_cap,), sentinel, dtype=np.int32)
+    wl[: len(ids)] = ids
+    hub_seg = np.asarray(dev["hub_seg"])
+    aff_np = np.asarray(aff)
+    rows = np.nonzero((hub_seg != sentinel) & (aff_np[hub_seg] > 0))[0]
+    wlc = np.full((tier.wl_chunk_cap,), tier.nc - 1, dtype=np.int32)
+    wlc[: len(rows)] = rows
+    return wl, wlc
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(3, 60),
+    seed=st.integers(0, 2**32 - 1),
+    prune=st.booleans(),
+)
+def test_step_worklist_equals_full(n, seed, prune):
+    """The worklist-compacted step computes exactly the full-shape step."""
+    rng = np.random.default_rng(seed)
+    adj = random_hub_graph(rng, n) if n > 40 else random_graph(rng, n)
+    tier, dev = pack(adj)
+    _, r, aff = _random_state(rng, n, tier)
+    wl, wlc = _worklists(dev, aff, tier)
+
+    full = model.make_step_df(tier, prune=prune)
+    wl_step = model.make_step_df_wl(tier, prune=prune)
+    base_args = (
+        r, dev["outdeg_inv"], dev["valid"], dev["inv_n"], *_graph_args(dev), aff
+    )
+    out_full = full(*base_args)
+    out_wl = wl_step(*base_args, wl, wlc)
+    for a, b in zip(out_full, out_wl):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 120), seed=st.integers(0, 2**32 - 1))
+def test_expand_variants_agree_with_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    adj = random_hub_graph(rng, n) if n > 40 else random_graph(rng, n)
+    tier, dev = pack(adj)
+    dv_small = (rng.random(n) < 0.2).astype(np.float64)
+    dn_small = (rng.random(n) < 0.3).astype(np.float64)
+    dv = formats.pad_vec(dv_small, tier.v)
+    dn = formats.pad_vec(dn_small, tier.v)
+    want = ref.expand_ref(dv_small, dn_small, adj)
+
+    pull = model.make_expand_pull(tier)
+    got = np.asarray(pull(dv, dn, *_graph_args(dev)))[:n]
+    np.testing.assert_array_equal(got, want)
+
+    scat = model.make_expand_scatter(tier)
+    got = np.asarray(
+        scat(dv, dn, dev["out_ell_idx"], dev["out_hub_edges"], dev["out_hub_seg"])
+    )[:n]
+    np.testing.assert_array_equal(got, want)
+
+    flat = model.make_expand_flat(tier)
+    got = np.asarray(flat(dv, dn, dev["te_src"], dev["te_dst"]))[:n]
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(3, 60), seed=st.integers(0, 2**32 - 1))
+def test_expand_scatter_worklist(n, seed):
+    rng = np.random.default_rng(seed)
+    adj = random_hub_graph(rng, n) if n > 40 else random_graph(rng, n)
+    tier, dev = pack(adj)
+    dv_small = (rng.random(n) < 0.2).astype(np.float64)
+    dn_small = (rng.random(n) < 0.3).astype(np.float64)
+    dv = formats.pad_vec(dv_small, tier.v)
+    dn = formats.pad_vec(dn_small, tier.v)
+    want = ref.expand_ref(dv_small, dn_small, adj)
+
+    # worklist over dn (out-side): affected-neighbor vertices + their chunks
+    sentinel = tier.v - 1
+    ids = np.nonzero(np.asarray(dn) > 0)[0]
+    wl = np.full((tier.wl_cap,), sentinel, dtype=np.int32)
+    wl[: len(ids)] = ids
+    seg = np.asarray(dev["out_hub_seg"])
+    rows = np.nonzero((seg != sentinel) & (np.asarray(dn)[seg] > 0))[0]
+    wlc = np.full((tier.wl_chunk_cap,), tier.nc - 1, dtype=np.int32)
+    wlc[: len(rows)] = rows
+
+    swl = model.make_expand_scatter_wl(tier)
+    got = np.asarray(
+        swl(dv, dn, dev["out_ell_idx"], dev["out_hub_edges"],
+            dev["out_hub_seg"], wl, wlc)
+    )[:n]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pallas_impl_step_matches_fused():
+    """Baking impl='pallas' into the step gives the same numbers."""
+    rng = np.random.default_rng(0)
+    adj = random_hub_graph(rng, 80)
+    tier, dev = pack(adj)
+    _, r, aff = _random_state(rng, 80, tier)
+    args = (r, dev["outdeg_inv"], dev["valid"], dev["inv_n"], *_graph_args(dev), aff)
+    out_f = model.make_step_df(tier, prune=True, impl="fused")(*args)
+    out_p = model.make_step_df(tier, prune=True, impl="pallas")(*args)
+    for a, b in zip(out_f, out_p):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-12)
+
+
+def test_packed_wrappers_match_unpacked():
+    """The packed (single-output) artifact wrappers compute exactly the
+    unpacked functions, with the documented state layout."""
+    rng = np.random.default_rng(5)
+    n = 90
+    adj = random_hub_graph(rng, n)
+    tier, dev = pack(adj)
+    v = tier.v
+    r_small, r, aff = _random_state(rng, n, tier)
+    dn0 = np.zeros(v)
+
+    # step_dfp packed
+    full = model.make_step_df(tier, prune=True)
+    packed = model.make_step_df_packed(tier, prune=True)
+    state = np.concatenate([np.asarray(r), np.asarray(aff), dn0, [0.0]])
+    out = np.asarray(packed(
+        state, dev["outdeg_inv"], dev["valid"], dev["inv_n"], *_graph_args(dev)
+    ))
+    r2, aff2, dn2, linf = full(
+        r, dev["outdeg_inv"], dev["valid"], dev["inv_n"], *_graph_args(dev), aff
+    )
+    np.testing.assert_allclose(out[:v], np.asarray(r2), rtol=1e-15)
+    np.testing.assert_array_equal(out[v:2*v], np.asarray(aff2))
+    np.testing.assert_array_equal(out[2*v:3*v], np.asarray(dn2))
+    assert out[3*v] == float(np.asarray(linf)[0])
+
+    # expand_pull packed: aff segment updated, r/dn/linf pass through
+    exp_full = model.make_expand_pull(tier)
+    exp_packed = model.make_expand_pull_packed(tier)
+    out2 = np.asarray(exp_packed(out, *_graph_args(dev)))
+    want_aff = np.asarray(exp_full(out[v:2*v], out[2*v:3*v], *_graph_args(dev)))
+    np.testing.assert_array_equal(out2[v:2*v], want_aff)
+    np.testing.assert_array_equal(out2[:v], out[:v])
+    np.testing.assert_array_equal(out2[2*v:], out[2*v:])
+
+    # peeks
+    peek_linf = model.make_peek_last(tier, 3*v+1)
+    assert np.asarray(peek_linf(out)) == [out[3*v]]
+    peek_ad = model.make_peek_aff_dn(tier)
+    np.testing.assert_array_equal(np.asarray(peek_ad(out)), out[v:3*v])
+
+    # step_plain packed (state1)
+    plain_full = model.make_step_plain(tier)
+    plain_packed = model.make_step_plain_packed(tier)
+    st1 = np.concatenate([np.asarray(r), [0.0]])
+    o1 = np.asarray(plain_packed(
+        st1, dev["outdeg_inv"], dev["valid"], dev["inv_n"], *_graph_args(dev)
+    ))
+    rp, lp = plain_full(
+        r, dev["outdeg_inv"], dev["valid"], dev["inv_n"], *_graph_args(dev)
+    )
+    np.testing.assert_allclose(o1[:v], np.asarray(rp), rtol=1e-15)
+    assert o1[v] == float(np.asarray(lp)[0])

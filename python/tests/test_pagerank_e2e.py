@@ -1,0 +1,148 @@
+"""End-to-end PageRank in Python, driving the device-format model functions
+exactly the way the Rust coordinator drives the compiled artifacts — the
+correctness signal for the whole device pipeline before Rust is involved."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats, model
+from compile.kernels import ref
+from conftest import pack, pad_ranks, random_graph, random_hub_graph
+
+TAU = 1e-10
+MAX_IT = 500
+
+
+def run_static_device(adj, tier, dev, r0=None):
+    n = len(adj)
+    r = pad_ranks(np.full(n, 1.0 / n) if r0 is None else r0, tier)
+    step = model.make_step_plain(tier)
+    for it in range(MAX_IT):
+        r_new, linf = step(
+            r, dev["outdeg_inv"], dev["valid"], dev["inv_n"],
+            dev["ell_idx"], dev["hub_edges"], dev["hub_seg"],
+        )
+        r = r_new
+        if float(linf[0]) <= TAU:
+            return np.asarray(r)[:n], it + 1
+    return np.asarray(r)[:n], MAX_IT
+
+
+def run_df_device(adj, tier, dev, r0, deletions, insertions, *, prune):
+    n = len(adj)
+    dv_s, dn_s = ref.initial_affected_ref(n, deletions, insertions)
+    dv = formats.pad_vec(dv_s, tier.v)
+    dn = formats.pad_vec(dn_s, tier.v)
+    expand = model.make_expand_pull(tier)
+    step = model.make_step_df(tier, prune=prune)
+    graph = (dev["ell_idx"], dev["hub_edges"], dev["hub_seg"])
+    dv = expand(dv, dn, *graph)
+    r = pad_ranks(r0, tier)
+    for it in range(MAX_IT):
+        r_new, dv, dn, linf = step(
+            r, dev["outdeg_inv"], dev["valid"], dev["inv_n"], *graph, dv
+        )
+        r = r_new
+        if float(linf[0]) <= TAU:
+            return np.asarray(r)[:n], it + 1
+        dv = expand(dv, dn, *graph)
+    return np.asarray(r)[:n], MAX_IT
+
+
+def _apply_update(adj, rng, n_ins, n_del):
+    """Random batch update (insert/delete), keeping self-loops intact."""
+    n = len(adj)
+    adj2 = [list(vs) for vs in adj]
+    deletions, insertions = [], []
+    edges = [(u, v) for u, vs in enumerate(adj2) for v in vs if u != v]
+    rng.shuffle(edges)
+    for u, v in edges[:n_del]:
+        adj2[u].remove(v)
+        deletions.append((u, v))
+    for _ in range(n_ins):
+        u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if u != v and v not in adj2[u]:
+            adj2[u].append(v)
+            insertions.append((u, v))
+    return adj2, deletions, insertions
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(5, 100), seed=st.integers(0, 2**32 - 1))
+def test_static_device_matches_oracle(n, seed):
+    rng = np.random.default_rng(seed)
+    adj = random_hub_graph(rng, n) if n > 40 else random_graph(rng, n)
+    tier, dev = pack(adj)
+    got, _ = run_static_device(adj, tier, dev)
+    want, _ = ref.naive_pagerank(adj)
+    np.testing.assert_allclose(got, want, atol=1e-9)
+    assert got.sum() == pytest.approx(1.0, abs=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n=st.integers(10, 80),
+    seed=st.integers(0, 2**32 - 1),
+    prune=st.booleans(),
+)
+def test_df_device_converges_to_static_ranks(n, seed, prune):
+    """DF/DF-P on the updated graph ends close to a from-scratch static run
+    (the paper's acceptability criterion, §5.3.1)."""
+    rng = np.random.default_rng(seed)
+    adj = random_graph(rng, n, avg_deg=5.0)
+    tier, dev = pack(adj)
+    r_prev, _ = run_static_device(adj, tier, dev)
+
+    adj2, deletions, insertions = _apply_update(adj, rng, n_ins=3, n_del=2)
+    tier2, dev2 = pack(adj2)
+    got, iters = run_df_device(
+        adj2, tier2, dev2, r_prev, deletions, insertions, prune=prune
+    )
+    want, _ = ref.naive_pagerank(adj2)
+    # Frontier tolerances admit small per-vertex error (tau_f = 1e-6).
+    err_l1 = np.abs(got - want).sum()
+    assert err_l1 < 1e-3
+    # ... and it matches the pure-python DF reference exactly.
+    ref_r, ref_iters = ref.dynamic_frontier_pagerank(
+        adj2, r_prev, deletions, insertions, prune=prune
+    )
+    np.testing.assert_allclose(got, ref_r, rtol=1e-9, atol=1e-12)
+    assert iters == ref_iters
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_df_iterations_bounded_by_cold_start(seed):
+    """Warm-start DF needs no more iterations than a cold static run for a
+    tiny batch (DF-P's pruning can stretch the L-inf tail on adversarial
+    seeds, so the strict "fewer" claim is asserted for plain DF and a 2x
+    envelope for DF-P)."""
+    rng = np.random.default_rng(seed)
+    n = 400
+    adj = random_graph(rng, n, avg_deg=6.0)
+    tier, dev = pack(adj)
+    r_prev, static_iters = run_static_device(adj, tier, dev)
+    adj2, deletions, insertions = _apply_update(adj, rng, n_ins=2, n_del=1)
+    tier2, dev2 = pack(adj2)
+    _, df_iters = run_df_device(
+        adj2, tier2, dev2, r_prev, deletions, insertions, prune=False
+    )
+    assert df_iters <= static_iters
+    _, dfp_iters = run_df_device(
+        adj2, tier2, dev2, r_prev, deletions, insertions, prune=True
+    )
+    assert dfp_iters <= 2 * static_iters
+
+
+def test_nd_warm_start_converges_faster():
+    rng = np.random.default_rng(1)
+    n = 300
+    adj = random_graph(rng, n, avg_deg=5.0)
+    tier, dev = pack(adj)
+    r_prev, cold_iters = run_static_device(adj, tier, dev)
+    adj2, _, _ = _apply_update(adj, rng, n_ins=3, n_del=2)
+    tier2, dev2 = pack(adj2)
+    _, warm_iters = run_static_device(adj2, tier2, dev2, r0=r_prev)
+    _, cold2_iters = run_static_device(adj2, tier2, dev2)
+    assert warm_iters < cold2_iters

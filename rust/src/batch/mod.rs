@@ -1,0 +1,123 @@
+//! Batch updates: the unit of change in a dynamic graph (paper Section 3.3),
+//! plus the random batch generator of Section 5.1.4 (80% insertions / 20%
+//! deletions, vertex pairs uniform, deletions uniform over existing edges).
+
+use crate::graph::{GraphBuilder, VertexId};
+use crate::util::Rng;
+
+/// A batch update Δ^t: edge deletions Δ^t- and insertions Δ^t+.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BatchUpdate {
+    pub deletions: Vec<(VertexId, VertexId)>,
+    pub insertions: Vec<(VertexId, VertexId)>,
+}
+
+impl BatchUpdate {
+    pub fn len(&self) -> usize {
+        self.deletions.len() + self.insertions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Every vertex touched by the update (sources and targets).
+    pub fn touched(&self) -> impl Iterator<Item = VertexId> + '_ {
+        self.deletions
+            .iter()
+            .chain(self.insertions.iter())
+            .flat_map(|&(u, v)| [u, v])
+    }
+}
+
+/// Generate a random batch of `size` edge updates against `g`, with
+/// `ins_frac` insertions (paper: 0.8) and the rest deletions. Insertions
+/// pick vertex pairs uniformly (skipping existing edges and self-pairs);
+/// deletions pick uniformly among existing non-self-loop edges. No vertices
+/// are added or removed (Section 5.1.4).
+pub fn random_batch(g: &GraphBuilder, size: usize, ins_frac: f64, seed: u64) -> BatchUpdate {
+    let mut rng = Rng::seed_from_u64(seed);
+    let n = g.num_vertices();
+    let n_ins = (size as f64 * ins_frac).round() as usize;
+    let n_del = size - n_ins;
+
+    let mut insertions = Vec::with_capacity(n_ins);
+    let mut attempts = 0;
+    while insertions.len() < n_ins && attempts < n_ins * 20 + 100 {
+        attempts += 1;
+        let u = rng.gen_range(n) as VertexId;
+        let v = rng.gen_range(n) as VertexId;
+        if u != v && !g.has_edge(u, v) {
+            insertions.push((u, v));
+        }
+    }
+
+    let mut real = g.real_edges();
+    rng.shuffle(&mut real);
+    let deletions = real.into_iter().take(n_del).collect();
+
+    BatchUpdate { deletions, insertions }
+}
+
+/// Apply the batch to the builder and re-add self-loops (the paper adds
+/// self-loops to all vertices alongside each batch update). Returns the
+/// number of edges actually changed.
+pub fn apply(g: &mut GraphBuilder, batch: &BatchUpdate) -> usize {
+    let mut changed = 0;
+    for &(u, v) in &batch.deletions {
+        changed += g.remove_edge(u, v) as usize;
+    }
+    for &(u, v) in &batch.insertions {
+        changed += g.insert_edge(u, v) as usize;
+    }
+    g.ensure_self_loops();
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators::er;
+
+    #[test]
+    fn respects_mix_and_size() {
+        let g = er::generate(300, 6.0, 5);
+        let b = random_batch(&g, 100, 0.8, 7);
+        assert_eq!(b.insertions.len(), 80);
+        assert_eq!(b.deletions.len(), 20);
+        for &(u, v) in &b.insertions {
+            assert!(u != v && !g.has_edge(u, v));
+        }
+        for &(u, v) in &b.deletions {
+            assert!(u != v && g.has_edge(u, v));
+        }
+    }
+
+    #[test]
+    fn apply_changes_graph_and_keeps_self_loops() {
+        let mut g = er::generate(200, 4.0, 1);
+        let m0 = g.num_edges();
+        let b = random_batch(&g, 50, 0.8, 2);
+        let changed = apply(&mut g, &b);
+        assert_eq!(changed, b.len());
+        assert_eq!(g.num_edges(), m0 + b.insertions.len() - b.deletions.len());
+        assert!(g.to_csr().has_no_dead_ends());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = er::generate(200, 4.0, 1);
+        assert_eq!(random_batch(&g, 30, 0.8, 9), random_batch(&g, 30, 0.8, 9));
+        assert_ne!(random_batch(&g, 30, 0.8, 9), random_batch(&g, 30, 0.8, 10));
+    }
+
+    #[test]
+    fn touched_covers_all_endpoints() {
+        let g = er::generate(100, 4.0, 3);
+        let b = random_batch(&g, 20, 0.5, 4);
+        let touched: std::collections::HashSet<_> = b.touched().collect();
+        for &(u, v) in b.deletions.iter().chain(&b.insertions) {
+            assert!(touched.contains(&u) && touched.contains(&v));
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Serving metrics: per-approach latency/iterations accounting.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::engines::Approach;
+
+/// Aggregates for one approach.
+#[derive(Debug, Clone, Default)]
+pub struct ApproachStats {
+    pub runs: usize,
+    pub total_time: Duration,
+    pub total_iterations: usize,
+    pub max_time: Duration,
+}
+
+impl ApproachStats {
+    fn record(&mut self, elapsed: Duration, iterations: usize) {
+        self.runs += 1;
+        self.total_time += elapsed;
+        self.total_iterations += iterations;
+        self.max_time = self.max_time.max(elapsed);
+    }
+
+    pub fn mean_time(&self) -> Duration {
+        if self.runs == 0 {
+            Duration::ZERO
+        } else {
+            self.total_time / self.runs as u32
+        }
+    }
+}
+
+/// Coordinator-wide counters.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub updates_applied: usize,
+    pub edges_inserted: usize,
+    pub edges_deleted: usize,
+    pub device_runs: usize,
+    pub native_fallbacks: usize,
+    pub per_approach: HashMap<Approach, ApproachStats>,
+}
+
+impl Metrics {
+    pub fn record_update(&mut self, inserted: usize, deleted: usize) {
+        self.updates_applied += 1;
+        self.edges_inserted += inserted;
+        self.edges_deleted += deleted;
+    }
+
+    pub fn record_run(
+        &mut self,
+        approach: Approach,
+        elapsed: Duration,
+        iterations: usize,
+        on_device: bool,
+    ) {
+        if on_device {
+            self.device_runs += 1;
+        } else {
+            self.native_fallbacks += 1;
+        }
+        self.per_approach.entry(approach).or_default().record(elapsed, iterations);
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let mut parts = vec![format!(
+            "updates={} (+{} -{}) device_runs={} native_fallbacks={}",
+            self.updates_applied,
+            self.edges_inserted,
+            self.edges_deleted,
+            self.device_runs,
+            self.native_fallbacks
+        )];
+        let mut keys: Vec<_> = self.per_approach.keys().copied().collect();
+        keys.sort_by_key(|a| a.label());
+        for a in keys {
+            let s = &self.per_approach[&a];
+            parts.push(format!(
+                "{}: {} runs, mean {:.2?}, {} iters",
+                a.label(),
+                s.runs,
+                s.mean_time(),
+                s.total_iterations
+            ));
+        }
+        parts.join(" | ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = Metrics::default();
+        m.record_update(8, 2);
+        m.record_run(Approach::Static, Duration::from_millis(10), 50, true);
+        m.record_run(Approach::DynamicFrontierPruning, Duration::from_millis(2), 5, true);
+        m.record_run(Approach::DynamicFrontierPruning, Duration::from_millis(4), 7, false);
+        assert_eq!(m.updates_applied, 1);
+        assert_eq!(m.device_runs, 2);
+        assert_eq!(m.native_fallbacks, 1);
+        let s = &m.per_approach[&Approach::DynamicFrontierPruning];
+        assert_eq!(s.runs, 2);
+        assert_eq!(s.mean_time(), Duration::from_millis(3));
+        assert!(m.summary().contains("DF-P"));
+    }
+}

@@ -1,0 +1,305 @@
+//! The dynamic-graph coordinator: owns the evolving graph and its PageRank
+//! state, applies batch updates, chooses the update approach (policy), and
+//! dispatches to the device (artifact) or native engine.
+//!
+//! This is the L3 "serving" layer: Python never runs here — the device path
+//! executes pre-compiled HLO artifacts via PJRT.
+
+pub mod metrics;
+pub mod policy;
+pub mod server;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::batch::{self, BatchUpdate};
+use crate::engines::config::PagerankConfig;
+use crate::engines::device::DeviceEngine;
+use crate::engines::{native, Approach, PagerankResult};
+use crate::graph::{CsrGraph, GraphBuilder, VertexId};
+use crate::runtime::ArtifactStore;
+
+pub use metrics::Metrics;
+pub use policy::{ApproachPolicy, PolicyConfig};
+
+/// What happened when a batch was applied.
+#[derive(Debug, Clone)]
+pub struct UpdateReport {
+    pub approach: Approach,
+    pub on_device: bool,
+    pub iterations: usize,
+    pub elapsed: Duration,
+    pub initially_affected: usize,
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub edges_changed: usize,
+}
+
+/// The coordinator service. Single-writer: wrap in the [`server`] loop for
+/// concurrent access.
+pub struct DynamicGraphService {
+    builder: GraphBuilder,
+    /// CSR of the previous snapshot (DT marks reachability in old ∪ new).
+    prev_csr: CsrGraph,
+    ranks: Option<Vec<f64>>,
+    store: Option<Arc<ArtifactStore>>,
+    pub cfg: PagerankConfig,
+    pub policy: ApproachPolicy,
+    pub metrics: Metrics,
+}
+
+impl DynamicGraphService {
+    /// Create from an initial graph. `store` enables the device engine
+    /// (falls back to native for graphs beyond the largest tier).
+    pub fn new(
+        mut builder: GraphBuilder,
+        store: Option<Arc<ArtifactStore>>,
+        cfg: PagerankConfig,
+    ) -> Self {
+        builder.ensure_self_loops();
+        let prev_csr = builder.to_csr();
+        Self {
+            builder,
+            prev_csr,
+            ranks: None,
+            store,
+            cfg,
+            policy: ApproachPolicy::default(),
+            metrics: Metrics::default(),
+        }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.builder.num_vertices()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.builder.num_edges()
+    }
+
+    pub fn ranks(&self) -> Option<&[f64]> {
+        self.ranks.as_deref()
+    }
+
+    /// Top-k vertices by rank (requires at least one computation).
+    pub fn top_k(&self, k: usize) -> Vec<(VertexId, f64)> {
+        let Some(r) = &self.ranks else { return Vec::new() };
+        let mut idx: Vec<VertexId> = (0..r.len() as VertexId).collect();
+        idx.sort_unstable_by(|&a, &b| {
+            r[b as usize].partial_cmp(&r[a as usize]).unwrap()
+        });
+        idx.into_iter().take(k).map(|v| (v, r[v as usize])).collect()
+    }
+
+    /// Run one approach against the current graph, preferring the device
+    /// engine when the graph fits a tier.
+    fn run(
+        &self,
+        approach: Approach,
+        g: &CsrGraph,
+        gt: &CsrGraph,
+        batch: &BatchUpdate,
+    ) -> Result<(PagerankResult, bool)> {
+        let prev = self.ranks.as_deref();
+        if let Some(store) = &self.store {
+            if store.tier_for(g.num_vertices(), g.num_edges()).is_some() {
+                let dg = store.pack_graph(g, gt)?;
+                let eng = DeviceEngine::new(store);
+                let res = eng.run_approach(
+                    approach,
+                    &dg,
+                    g,
+                    &self.prev_csr,
+                    &self.cfg,
+                    prev,
+                    batch,
+                )?;
+                return Ok((res, true));
+            }
+        }
+        let res = match approach {
+            Approach::Static => native::static_pagerank(g, gt, &self.cfg, None),
+            Approach::NaiveDynamic => {
+                native::naive_dynamic(g, gt, &self.cfg, prev.expect("ND needs ranks"))
+            }
+            Approach::DynamicTraversal => native::dynamic::dynamic_traversal(
+                g,
+                gt,
+                &self.prev_csr,
+                &self.cfg,
+                prev.expect("DT needs ranks"),
+                batch,
+            ),
+            Approach::DynamicFrontier => native::dynamic::dynamic_frontier(
+                g,
+                gt,
+                &self.cfg,
+                prev.expect("DF needs ranks"),
+                batch,
+                false,
+            ),
+            Approach::DynamicFrontierPruning => native::dynamic::dynamic_frontier(
+                g,
+                gt,
+                &self.cfg,
+                prev.expect("DF-P needs ranks"),
+                batch,
+                true,
+            ),
+        };
+        Ok((res, false))
+    }
+
+    /// Compute the initial ranks (Static) if none exist yet.
+    pub fn ensure_ranks(&mut self) -> Result<UpdateReport> {
+        if self.ranks.is_some() {
+            let g = self.builder.to_csr();
+            return Ok(UpdateReport {
+                approach: Approach::Static,
+                on_device: false,
+                iterations: 0,
+                elapsed: Duration::ZERO,
+                initially_affected: 0,
+                num_vertices: g.num_vertices(),
+                num_edges: g.num_edges(),
+                edges_changed: 0,
+            });
+        }
+        self.apply_update(BatchUpdate::default())
+    }
+
+    /// Apply a batch update and refresh ranks with the policy-chosen
+    /// approach. An empty batch on a fresh service triggers the initial
+    /// Static computation.
+    pub fn apply_update(&mut self, batch: BatchUpdate) -> Result<UpdateReport> {
+        let old_csr = self.builder.to_csr();
+        let edges_changed = batch::apply(&mut self.builder, &batch);
+        let g = self.builder.to_csr();
+        let gt = g.transpose();
+
+        let approach =
+            self.policy.choose(batch.len(), g.num_edges(), self.ranks.is_some());
+        let (res, on_device) = self.run(approach, &g, &gt, &batch)?;
+
+        self.metrics.record_update(batch.insertions.len(), batch.deletions.len());
+        self.metrics.record_run(approach, res.elapsed, res.iterations, on_device);
+
+        let report = UpdateReport {
+            approach,
+            on_device,
+            iterations: res.iterations,
+            elapsed: res.elapsed,
+            initially_affected: res.initially_affected,
+            num_vertices: g.num_vertices(),
+            num_edges: g.num_edges(),
+            edges_changed,
+        };
+        self.ranks = Some(res.ranks);
+        self.prev_csr = old_csr;
+        Ok(report)
+    }
+
+    /// Force a full static recomputation (periodic refresh; also resets the
+    /// policy's error guard).
+    pub fn refresh_static(&mut self) -> Result<UpdateReport> {
+        let g = self.builder.to_csr();
+        let gt = g.transpose();
+        let (res, on_device) = self.run(Approach::Static, &g, &gt, &BatchUpdate::default())?;
+        self.metrics
+            .record_run(Approach::Static, res.elapsed, res.iterations, on_device);
+        self.policy.reset();
+        let report = UpdateReport {
+            approach: Approach::Static,
+            on_device,
+            iterations: res.iterations,
+            elapsed: res.elapsed,
+            initially_affected: 0,
+            num_vertices: g.num_vertices(),
+            num_edges: g.num_edges(),
+            edges_changed: 0,
+        };
+        self.ranks = Some(res.ranks);
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators::er;
+
+    fn service(n: usize) -> DynamicGraphService {
+        DynamicGraphService::new(
+            er::generate(n, 4.0, 3),
+            None, // native-only in unit tests; device covered in tests/
+            PagerankConfig::default(),
+        )
+    }
+
+    #[test]
+    fn first_update_is_static_then_dfp() {
+        // policy switches to ND above 1e-4|E|, so use a 1-edge batch on a
+        // graph with >10k edges to stay in DF-P territory
+        let mut s = service(3000);
+        let r0 = s.apply_update(BatchUpdate::default()).unwrap();
+        assert_eq!(r0.approach, Approach::Static);
+        assert!(s.ranks().is_some());
+
+        let b = batch::random_batch(&s.builder, 1, 1.0, 1);
+        let r1 = s.apply_update(b).unwrap();
+        assert_eq!(r1.approach, Approach::DynamicFrontierPruning);
+        assert!(r1.initially_affected > 0);
+    }
+
+    #[test]
+    fn large_batch_switches_to_nd() {
+        let mut s = service(300);
+        s.ensure_ranks().unwrap();
+        let m = s.num_edges();
+        let b = batch::random_batch(&s.builder, m / 100, 0.8, 2); // 1% >> 1e-4
+        let r = s.apply_update(b).unwrap();
+        assert_eq!(r.approach, Approach::NaiveDynamic);
+    }
+
+    #[test]
+    fn top_k_sorted() {
+        let mut s = service(200);
+        s.ensure_ranks().unwrap();
+        let top = s.top_k(10);
+        assert_eq!(top.len(), 10);
+        assert!(top.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    #[test]
+    fn ranks_stay_close_to_static_across_updates() {
+        let mut s = service(250);
+        s.ensure_ranks().unwrap();
+        for seed in 0..5 {
+            let b = batch::random_batch(&s.builder, 3, 0.8, seed);
+            s.apply_update(b).unwrap();
+        }
+        let g = s.builder.to_csr();
+        let gt = g.transpose();
+        let want = native::static_pagerank(&g, &gt, &s.cfg, None).ranks;
+        let err: f64 = s
+            .ranks()
+            .unwrap()
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(err < 1e-2, "accumulated L1 error {err}");
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let mut s = service(150);
+        s.ensure_ranks().unwrap();
+        let b = batch::random_batch(&s.builder, 2, 0.8, 7);
+        s.apply_update(b).unwrap();
+        assert_eq!(s.metrics.updates_applied, 2);
+        assert!(s.metrics.summary().contains("Static"));
+    }
+}

@@ -1,0 +1,103 @@
+//! Approach selection policy — the paper's Section 5.3 recommendations as
+//! executable logic.
+//!
+//! - real-world dynamic streams: DF-P by default; switch to ND if observed
+//!   error climbs above a guard band (Section 5.3.1);
+//! - large random batches: DF-P up to 1e-4·|E|, ND beyond (Section 5.3.2);
+//! - no previous ranks (first snapshot): Static.
+
+use crate::engines::Approach;
+
+/// Tunable policy thresholds.
+#[derive(Debug, Clone)]
+pub struct PolicyConfig {
+    /// Batch size (as a fraction of |E|) above which ND replaces DF-P.
+    pub nd_batch_fraction: f64,
+    /// L1-error guard: if a calibration run reports error above this, fall
+    /// back to ND for subsequent updates.
+    pub error_guard: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        Self { nd_batch_fraction: 1e-4, error_guard: 1e-3 }
+    }
+}
+
+/// Stateful policy: remembers whether the error guard tripped.
+#[derive(Debug, Clone, Default)]
+pub struct ApproachPolicy {
+    pub config: PolicyConfig,
+    error_tripped: bool,
+}
+
+impl ApproachPolicy {
+    pub fn new(config: PolicyConfig) -> Self {
+        Self { config, error_tripped: false }
+    }
+
+    /// Choose the approach for a batch of `batch_len` edge updates against a
+    /// graph with `num_edges` edges. `has_previous` is false for the first
+    /// snapshot.
+    pub fn choose(&self, batch_len: usize, num_edges: usize, has_previous: bool) -> Approach {
+        if !has_previous {
+            return Approach::Static;
+        }
+        if self.error_tripped {
+            return Approach::NaiveDynamic;
+        }
+        let frac = batch_len as f64 / num_edges.max(1) as f64;
+        if frac > self.config.nd_batch_fraction {
+            Approach::NaiveDynamic
+        } else {
+            Approach::DynamicFrontierPruning
+        }
+    }
+
+    /// Feed back an observed L1 error (from a calibration run against the
+    /// reference); trips the ND fallback per the paper's recommendation.
+    pub fn observe_error(&mut self, l1_error: f64) {
+        if l1_error > self.config.error_guard {
+            self.error_tripped = true;
+        }
+    }
+
+    pub fn error_tripped(&self) -> bool {
+        self.error_tripped
+    }
+
+    /// Reset the guard (e.g. after a periodic full static refresh).
+    pub fn reset(&mut self) {
+        self.error_tripped = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_snapshot_is_static() {
+        let p = ApproachPolicy::default();
+        assert_eq!(p.choose(10, 1000, false), Approach::Static);
+    }
+
+    #[test]
+    fn small_batches_use_dfp_large_use_nd() {
+        let p = ApproachPolicy::default();
+        assert_eq!(p.choose(1, 1_000_000, true), Approach::DynamicFrontierPruning);
+        assert_eq!(p.choose(10_000, 1_000_000, true), Approach::NaiveDynamic);
+    }
+
+    #[test]
+    fn error_guard_trips_and_resets() {
+        let mut p = ApproachPolicy::default();
+        p.observe_error(1e-5);
+        assert_eq!(p.choose(1, 1_000_000, true), Approach::DynamicFrontierPruning);
+        p.observe_error(0.5);
+        assert!(p.error_tripped());
+        assert_eq!(p.choose(1, 1_000_000, true), Approach::NaiveDynamic);
+        p.reset();
+        assert_eq!(p.choose(1, 1_000_000, true), Approach::DynamicFrontierPruning);
+    }
+}

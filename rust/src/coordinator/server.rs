@@ -1,0 +1,167 @@
+//! Request front-end for the coordinator.
+//!
+//! The service is single-writer (it owns the evolving graph), so requests
+//! are serialized through an mpsc channel into a dedicated thread (PJRT
+//! execution is synchronous); clients get a cheap cloneable
+//! [`CoordinatorHandle`]. This is the "leader" loop of the L3 architecture:
+//! update producers and rank readers never touch the graph state directly.
+
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use super::{DynamicGraphService, UpdateReport};
+use crate::batch::BatchUpdate;
+use crate::graph::VertexId;
+
+enum Request {
+    Update(BatchUpdate, mpsc::Sender<Result<UpdateReport>>),
+    TopK(usize, mpsc::Sender<Vec<(VertexId, f64)>>),
+    RanksOf(Vec<VertexId>, mpsc::Sender<Vec<f64>>),
+    Stats(mpsc::Sender<String>),
+    RefreshStatic(mpsc::Sender<Result<UpdateReport>>),
+}
+
+/// Cloneable handle to a running coordinator. Methods block until the
+/// coordinator thread answers (requests are processed in FIFO order).
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl CoordinatorHandle {
+    fn call<T>(&self, make: impl FnOnce(mpsc::Sender<T>) -> Request) -> Result<T> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(make(tx))
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped request"))
+    }
+
+    /// Apply a batch update; returns once ranks are refreshed.
+    pub fn update(&self, batch: BatchUpdate) -> Result<UpdateReport> {
+        self.call(|tx| Request::Update(batch, tx))?
+    }
+
+    /// Highest-ranked vertices.
+    pub fn top_k(&self, k: usize) -> Result<Vec<(VertexId, f64)>> {
+        self.call(|tx| Request::TopK(k, tx))
+    }
+
+    /// Ranks of specific vertices (0.0 if not yet computed).
+    pub fn ranks_of(&self, vertices: Vec<VertexId>) -> Result<Vec<f64>> {
+        self.call(|tx| Request::RanksOf(vertices, tx))
+    }
+
+    /// Metrics summary line.
+    pub fn stats(&self) -> Result<String> {
+        self.call(Request::Stats)
+    }
+
+    /// Force a full static refresh.
+    pub fn refresh_static(&self) -> Result<UpdateReport> {
+        self.call(Request::RefreshStatic)?
+    }
+}
+
+/// Spawn the coordinator loop on a dedicated thread; returns the handle.
+/// The loop exits when every handle is dropped.
+///
+/// Takes a *factory* rather than a service: the PJRT client handles inside
+/// [`crate::runtime::ArtifactStore`] are not `Send`, so the service (and
+/// its store) must be constructed on the coordinator thread itself.
+pub fn spawn<F>(make: F) -> CoordinatorHandle
+where
+    F: FnOnce() -> DynamicGraphService + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel::<Request>();
+    std::thread::spawn(move || {
+        let mut service = make();
+        while let Ok(req) = rx.recv() {
+            match req {
+                Request::Update(batch, resp) => {
+                    let _ = resp.send(service.apply_update(batch));
+                }
+                Request::TopK(k, resp) => {
+                    let _ = resp.send(service.top_k(k));
+                }
+                Request::RanksOf(vs, resp) => {
+                    let ranks = service.ranks().unwrap_or(&[]);
+                    let out = vs
+                        .iter()
+                        .map(|&v| ranks.get(v as usize).copied().unwrap_or(0.0))
+                        .collect();
+                    let _ = resp.send(out);
+                }
+                Request::Stats(resp) => {
+                    let _ = resp.send(service.metrics.summary());
+                }
+                Request::RefreshStatic(resp) => {
+                    let _ = resp.send(service.refresh_static());
+                }
+            }
+        }
+    });
+    CoordinatorHandle { tx }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::random_batch;
+    use crate::engines::config::PagerankConfig;
+    use crate::generators::er;
+
+    #[test]
+    fn serve_updates_and_queries() {
+        let b = er::generate(200, 4.0, 1);
+        let probe = random_batch(&b, 4, 0.8, 2);
+        let h = spawn(move || DynamicGraphService::new(b, None, PagerankConfig::default()));
+
+        let r0 = h.update(BatchUpdate::default()).unwrap();
+        assert!(r0.iterations > 0);
+        let r1 = h.update(probe).unwrap();
+        assert!(r1.edges_changed > 0);
+
+        let top = h.top_k(5).unwrap();
+        assert_eq!(top.len(), 5);
+        let ranks = h.ranks_of(vec![0, 1, 2]).unwrap();
+        assert_eq!(ranks.len(), 3);
+        assert!(ranks.iter().all(|&r| r > 0.0));
+        let stats = h.stats().unwrap();
+        assert!(stats.contains("updates=2"));
+    }
+
+    #[test]
+    fn concurrent_clients_serialize() {
+        let h = spawn(|| {
+            DynamicGraphService::new(er::generate(150, 4.0, 9), None, PagerankConfig::default())
+        });
+        h.update(BatchUpdate::default()).unwrap();
+
+        std::thread::scope(|s| {
+            for i in 0..8 {
+                let h = h.clone();
+                s.spawn(move || {
+                    if i % 2 == 0 {
+                        let top = h.top_k(3).unwrap();
+                        assert_eq!(top.len(), 3);
+                    } else {
+                        let stats = h.stats().unwrap();
+                        assert!(!stats.is_empty());
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn handle_survives_refresh() {
+        let h = spawn(|| {
+            DynamicGraphService::new(er::generate(100, 4.0, 5), None, PagerankConfig::default())
+        });
+        h.update(BatchUpdate::default()).unwrap();
+        let rep = h.refresh_static().unwrap();
+        assert!(rep.iterations > 0);
+    }
+}

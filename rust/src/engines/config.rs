@@ -1,0 +1,53 @@
+//! PageRank configuration — the paper's Section 5.1.2 settings as defaults.
+
+/// Tolerances and limits shared by every engine and approach.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PagerankConfig {
+    /// Damping factor α (paper: 0.85).
+    pub alpha: f64,
+    /// Iteration tolerance τ on the L∞ rank delta (paper: 1e-10).
+    pub tau: f64,
+    /// Frontier tolerance τ_f: relative rank change above this marks the
+    /// vertex's out-neighbors affected (paper: 1e-6).
+    pub tau_frontier: f64,
+    /// Prune tolerance τ_p: relative rank change at or below this unflags
+    /// the vertex in DF-P (paper: 1e-6).
+    pub tau_prune: f64,
+    /// MAX_ITERATIONS (paper: 500).
+    pub max_iterations: usize,
+}
+
+impl Default for PagerankConfig {
+    fn default() -> Self {
+        Self {
+            alpha: 0.85,
+            tau: 1e-10,
+            tau_frontier: 1e-6,
+            tau_prune: 1e-6,
+            max_iterations: 500,
+        }
+    }
+}
+
+impl PagerankConfig {
+    /// The reference configuration of Section 5.1.5: an unreachably small
+    /// tolerance so the run is capped by `max_iterations` (500).
+    pub fn reference() -> Self {
+        Self { tau: 1e-100, ..Self::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = PagerankConfig::default();
+        assert_eq!(c.alpha, 0.85);
+        assert_eq!(c.tau, 1e-10);
+        assert_eq!(c.tau_frontier, 1e-6);
+        assert_eq!(c.tau_prune, 1e-6);
+        assert_eq!(c.max_iterations, 500);
+    }
+}

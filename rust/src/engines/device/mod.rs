@@ -1,0 +1,470 @@
+//! Device ("GPU") engines: the paper's contribution, executed as AOT HLO
+//! artifacts on the PJRT backend.
+//!
+//! Each PageRank run is a Rust-driven loop over compiled step/expand
+//! executables (one launch per kernel pair, as in the paper). The rank
+//! vector and affected flags live in a **device-resident packed state
+//! buffer** threaded from one launch to the next; per iteration the host
+//! reads back only the 8-byte L∞ delta via a `peek` program (and, in
+//! worklist mode, the flag segments) — mirroring the paper's
+//! convergence-detection transfer.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::batch::BatchUpdate;
+use crate::engines::config::PagerankConfig;
+use crate::engines::native::affected::{dt_affected, expand_affected, initial_affected};
+use crate::engines::{Approach, PagerankResult};
+use crate::graph::CsrGraph;
+use crate::runtime::exec::{buf_f64, buf_i32, exec1, read_f64, read_scalar, GraphBufs};
+use crate::runtime::{ArtifactStore, DeviceGraph};
+
+/// Work-partitioning strategy between the thread-per-vertex and
+/// block-per-vertex kernels (the paper's Figure 1 ablation, plus our
+/// gather-based expansion refinement).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PartitionMode {
+    /// "Don't Partition": rank update via the flat edge-list segmented
+    /// reduction; expansion via the flat scatter.
+    DontPartition,
+    /// "Partition G'": in-degree-partitioned rank kernels; flat expansion.
+    PartitionGPrime,
+    /// "Partition G, G'": partitioned rank kernels + out-degree-partitioned
+    /// scatter expansion (the paper's best configuration).
+    PartitionBoth,
+    /// Partition G, G' with our pull (gather, atomics-free) expansion.
+    PartitionBothPull,
+}
+
+impl PartitionMode {
+    /// Parse a CLI name (nopart / gprime / both / both-pull).
+    pub fn parse(s: &str) -> Option<PartitionMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "nopart" | "dont-partition" => Some(PartitionMode::DontPartition),
+            "gprime" | "partition-gprime" => Some(PartitionMode::PartitionGPrime),
+            "both" | "partition-both" => Some(PartitionMode::PartitionBoth),
+            "both-pull" | "partition-both-pull" => Some(PartitionMode::PartitionBothPull),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PartitionMode::DontPartition => "Don't Partition",
+            PartitionMode::PartitionGPrime => "Partition G'",
+            PartitionMode::PartitionBoth => "Partition G, G'",
+            PartitionMode::PartitionBothPull => "Partition G, G' (pull)",
+        }
+    }
+}
+
+/// The artifact-backed engine. Holds a reference to the executable store;
+/// cheap to construct per call site.
+pub struct DeviceEngine<'a> {
+    store: &'a ArtifactStore,
+}
+
+impl<'a> DeviceEngine<'a> {
+    pub fn new(store: &'a ArtifactStore) -> Self {
+        Self { store }
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        self.store
+    }
+
+    /// The engine's tolerances are partly baked into the artifacts; reject
+    /// configs that silently diverge from them.
+    fn check_config(&self, cfg: &PagerankConfig) -> Result<()> {
+        let c = &self.store.manifest().constants;
+        ensure!(cfg.alpha == c.alpha, "alpha {} != baked {}", cfg.alpha, c.alpha);
+        ensure!(
+            cfg.tau_frontier == c.tau_frontier && cfg.tau_prune == c.tau_prune,
+            "frontier/prune tolerances differ from baked artifact constants"
+        );
+        Ok(())
+    }
+
+    fn initial_ranks(&self, dg: &DeviceGraph, r0: Option<&[f64]>) -> Vec<f64> {
+        match r0 {
+            Some(prev) => dg.pad(prev),
+            None => {
+                let mut v = vec![0.0f64; dg.tier.v];
+                v[..dg.n].fill(1.0 / dg.n as f64);
+                v
+            }
+        }
+    }
+
+    /// Shared Static/ND/DT loop over the `state1 = [r | linf]` layout.
+    fn run_state1(
+        &self,
+        dg: &DeviceGraph,
+        cfg: &PagerankConfig,
+        r0: Option<&[f64]>,
+        aff: Option<&[f64]>, // DT's fixed mask (tier-shaped)
+    ) -> Result<(Vec<f64>, usize, std::time::Duration)> {
+        self.check_config(cfg)?;
+        let tier = &dg.tier.name;
+        let step_name = if aff.is_some() { "step_dt" } else { "step_plain" };
+        let exe_step = self.store.executable(step_name, tier)?;
+        let exe_peek = self.store.executable("peek_linf1", tier)?;
+        let bufs = GraphBufs::build(self.store, dg)?;
+        let aff_buf = match aff {
+            Some(a) => Some(buf_f64(self.store, a, &[dg.tier.v])?),
+            None => None,
+        };
+
+        let mut host_state = self.initial_ranks(dg, r0);
+        host_state.push(0.0); // linf slot
+        let mut state = buf_f64(self.store, &host_state, &[dg.tier.v + 1])?;
+
+        let start = Instant::now();
+        let mut iterations = 0;
+        for _ in 0..cfg.max_iterations {
+            let mut args: Vec<&xla::PjRtBuffer> = vec![
+                &state,
+                &bufs.odi,
+                &bufs.valid,
+                &bufs.inv_n,
+                &bufs.ell,
+                &bufs.hub_edges,
+                &bufs.hub_seg,
+            ];
+            if let Some(a) = &aff_buf {
+                args.push(a);
+            }
+            state = exec1(&exe_step, &args)?;
+            iterations += 1;
+            let linf = read_scalar(&exec1(&exe_peek, &[&state])?)?;
+            if linf <= cfg.tau {
+                break;
+            }
+        }
+        let elapsed = start.elapsed() + dg.pack_time;
+        let mut ranks = read_f64(&state)?;
+        ranks.truncate(dg.n);
+        Ok((ranks, iterations, elapsed))
+    }
+
+    /// Static PageRank (Algorithm 1) — or Naive-dynamic when `r0` is given.
+    pub fn static_pagerank(
+        &self,
+        dg: &DeviceGraph,
+        cfg: &PagerankConfig,
+        r0: Option<&[f64]>,
+    ) -> Result<PagerankResult> {
+        let (ranks, iterations, elapsed) = self.run_state1(dg, cfg, r0, None)?;
+        Ok(PagerankResult::new(ranks, iterations, elapsed))
+    }
+
+    /// Naive-dynamic: warm start from the previous ranks.
+    pub fn naive_dynamic(
+        &self,
+        dg: &DeviceGraph,
+        cfg: &PagerankConfig,
+        prev: &[f64],
+    ) -> Result<PagerankResult> {
+        self.static_pagerank(dg, cfg, Some(prev))
+    }
+
+    /// Dynamic Traversal: host BFS marking (old + new graph), then masked
+    /// device iterations over the fixed affected set.
+    pub fn dynamic_traversal(
+        &self,
+        dg: &DeviceGraph,
+        g: &CsrGraph,
+        g_old: &CsrGraph,
+        cfg: &PagerankConfig,
+        prev: &[f64],
+        batch: &BatchUpdate,
+    ) -> Result<PagerankResult> {
+        let mark_start = Instant::now();
+        let aff_u8 = dt_affected(g, g_old, batch);
+        let marking = mark_start.elapsed();
+        let initially_affected = aff_u8.iter().filter(|&&x| x != 0).count();
+        let aff_f: Vec<f64> = aff_u8.iter().map(|&x| x as f64).collect();
+        let aff = dg.pad(&aff_f);
+        let (ranks, iterations, elapsed) =
+            self.run_state1(dg, cfg, Some(prev), Some(&aff))?;
+        Ok(PagerankResult {
+            ranks,
+            iterations,
+            elapsed: elapsed + marking, // marking counts per Section 5.1.5
+            initially_affected,
+        })
+    }
+
+    /// Dynamic Frontier (`prune=false`) / DF-P (`prune=true`), Algorithm 2.
+    ///
+    /// `mode` selects the Figure-1 work partitioning; `use_worklist` enables
+    /// the compacted step/expand variants when the frontier fits their
+    /// capacity (the fixed-shape analog of the GPU skipping unaffected
+    /// vertices). `g` is the current out-adjacency (host side), used to
+    /// project the post-expansion frontier for worklist construction.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dynamic_frontier(
+        &self,
+        dg: &DeviceGraph,
+        g: &CsrGraph,
+        cfg: &PagerankConfig,
+        prev: &[f64],
+        batch: &BatchUpdate,
+        prune: bool,
+        mode: PartitionMode,
+        use_worklist: bool,
+    ) -> Result<PagerankResult> {
+        self.check_config(cfg)?;
+        let tier = &dg.tier.name;
+        let v = dg.tier.v;
+        let base = if prune { "step_dfp" } else { "step_df" };
+        let (step_name, expand_name) = match mode {
+            PartitionMode::DontPartition => (format!("{base}_nopart"), "expand_flat"),
+            PartitionMode::PartitionGPrime => (base.to_string(), "expand_flat"),
+            PartitionMode::PartitionBoth => (base.to_string(), "expand_scatter"),
+            PartitionMode::PartitionBothPull => (base.to_string(), "expand_pull"),
+        };
+        let exe_step = self.store.executable(&step_name, tier)?;
+        let exe_expand = self.store.executable(expand_name, tier)?;
+        let exe_peek = self.store.executable("peek_linf3", tier)?;
+        let compacted = use_worklist && mode != PartitionMode::DontPartition;
+        let exe_step_wl = if compacted {
+            Some(self.store.executable(&format!("{base}_wl"), tier)?)
+        } else {
+            None
+        };
+        let exe_expand_wl = if compacted {
+            Some(self.store.executable("expand_scatter_wl", tier)?)
+        } else {
+            None
+        };
+        let exe_peek_ad = if compacted {
+            Some(self.store.executable("peek_aff_dn", tier)?)
+        } else {
+            None
+        };
+        let bufs = GraphBufs::build(self.store, dg)?;
+
+        let start = Instant::now();
+        // Algorithm 5 initialAffected on the host (O(|batch|)).
+        let (dv0, dn0) = initial_affected(dg.n, batch);
+        let mut host_state = vec![0.0f64; 3 * v + 1];
+        host_state[..v].copy_from_slice(&self.initial_ranks(dg, Some(prev)));
+        for i in 0..dg.n {
+            host_state[v + i] = dv0[i] as f64;
+            host_state[2 * v + i] = dn0[i] as f64;
+        }
+        let mut state = buf_f64(self.store, &host_state, &[3 * v + 1])?;
+
+        // host mirror of the frontier (worklist construction + metrics);
+        // kept exact by re-applying the same expansions the device does.
+        let mut dv_host = dv0;
+        let dn_host: Vec<f64> = host_state[2 * v..3 * v].to_vec();
+
+        // initial expansion: mark out-neighbors of update sources (device),
+        // mirrored on host.
+        state = self.expand(
+            &exe_expand,
+            exe_expand_wl.as_deref(),
+            dg,
+            &bufs,
+            mode,
+            state,
+            &dn_host,
+        )?;
+        expand_affected(&mut dv_host, &dn0, g);
+        let initially_affected = dv_host.iter().filter(|&&x| x != 0).count();
+        let mut aff_approx: Vec<f64> = {
+            let mut a = vec![0.0f64; v];
+            for i in 0..dg.n {
+                a[i] = dv_host[i] as f64;
+            }
+            a
+        };
+
+        let mut iterations = 0;
+        for _ in 0..cfg.max_iterations {
+            // pick compacted or full-shape step using the host frontier view
+            let wl = if compacted {
+                dg.worklists(&aff_approx, &dg.in_side)
+            } else {
+                None
+            };
+            state = match (&exe_step_wl, wl) {
+                (Some(exe_wl), Some((wl, wlc))) => {
+                    let wl_b = buf_i32(self.store, &wl, &[dg.tier.wl_cap])?;
+                    let wlc_b = buf_i32(self.store, &wlc, &[dg.tier.wl_chunk_cap])?;
+                    exec1(exe_wl, &[
+                        &state,
+                        &bufs.odi,
+                        &bufs.valid,
+                        &bufs.inv_n,
+                        &bufs.ell,
+                        &bufs.hub_edges,
+                        &bufs.hub_seg,
+                        &wl_b,
+                        &wlc_b,
+                    ])?
+                }
+                _ => {
+                    if mode == PartitionMode::DontPartition {
+                        exec1(&exe_step, &[
+                            &state,
+                            &bufs.odi,
+                            &bufs.valid,
+                            &bufs.inv_n,
+                            &bufs.te_src,
+                            &bufs.te_dst,
+                        ])?
+                    } else {
+                        exec1(&exe_step, &[
+                            &state,
+                            &bufs.odi,
+                            &bufs.valid,
+                            &bufs.inv_n,
+                            &bufs.ell,
+                            &bufs.hub_edges,
+                            &bufs.hub_seg,
+                        ])?
+                    }
+                }
+            };
+            iterations += 1;
+            let linf = read_scalar(&exec1(&exe_peek, &[&state])?)?;
+            if linf <= cfg.tau {
+                break;
+            }
+
+            // worklist mode: fetch post-step flags to drive the compacted
+            // expansion and the next step's worklist.
+            let dn_now: Vec<f64> = if let Some(peek_ad) = &exe_peek_ad {
+                let ad = read_f64(&exec1(peek_ad, &[&state])?)?;
+                // next-step frontier = post-prune aff ∪ out-neighbors(dn)
+                aff_approx.copy_from_slice(&ad[..v]);
+                let dn = ad[v..].to_vec();
+                for u in 0..dg.n {
+                    if dn[u] > 0.0 {
+                        for &w in g.neighbors(u as u32) {
+                            aff_approx[w as usize] = 1.0;
+                        }
+                    }
+                }
+                dn
+            } else {
+                Vec::new()
+            };
+            state = self.expand(
+                &exe_expand,
+                exe_expand_wl.as_deref(),
+                dg,
+                &bufs,
+                mode,
+                state,
+                &dn_now,
+            )?;
+        }
+        let elapsed = start.elapsed() + dg.pack_time;
+        let mut ranks = read_f64(&state)?;
+        ranks.truncate(dg.n);
+        Ok(PagerankResult { ranks, iterations, elapsed, initially_affected })
+    }
+
+    /// One frontier expansion launch (Algorithm 5 expandAffected), using the
+    /// compacted scatter when a worklist over `dn_host` fits, else the
+    /// mode's full kernel.
+    #[allow(clippy::too_many_arguments)]
+    fn expand(
+        &self,
+        exe_expand: &xla::PjRtLoadedExecutable,
+        exe_expand_wl: Option<&xla::PjRtLoadedExecutable>,
+        dg: &DeviceGraph,
+        bufs: &GraphBufs,
+        mode: PartitionMode,
+        state: xla::PjRtBuffer,
+        dn_host: &[f64],
+    ) -> Result<xla::PjRtBuffer> {
+        if let Some(exe_wl) = exe_expand_wl {
+            if !dn_host.is_empty() {
+                if let Some((wl, wlc)) = dg.worklists(dn_host, &dg.out_side) {
+                    let wl_b = buf_i32(self.store, &wl, &[dg.tier.wl_cap])?;
+                    let wlc_b = buf_i32(self.store, &wlc, &[dg.tier.wl_chunk_cap])?;
+                    return exec1(exe_wl, &[
+                        &state,
+                        &bufs.out_ell,
+                        &bufs.out_hub_edges,
+                        &bufs.out_hub_seg,
+                        &wl_b,
+                        &wlc_b,
+                    ]);
+                }
+            }
+        }
+        match mode {
+            PartitionMode::DontPartition | PartitionMode::PartitionGPrime => {
+                exec1(exe_expand, &[&state, &bufs.te_src, &bufs.te_dst])
+            }
+            PartitionMode::PartitionBoth => exec1(exe_expand, &[
+                &state,
+                &bufs.out_ell,
+                &bufs.out_hub_edges,
+                &bufs.out_hub_seg,
+            ]),
+            PartitionMode::PartitionBothPull => exec1(exe_expand, &[
+                &state,
+                &bufs.ell,
+                &bufs.hub_edges,
+                &bufs.hub_seg,
+            ]),
+        }
+    }
+
+    /// Dispatch by approach (used by the coordinator and the harness).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_approach(
+        &self,
+        approach: Approach,
+        dg: &DeviceGraph,
+        g: &CsrGraph,
+        g_old: &CsrGraph,
+        cfg: &PagerankConfig,
+        prev: Option<&[f64]>,
+        batch: &BatchUpdate,
+    ) -> Result<PagerankResult> {
+        match approach {
+            Approach::Static => self.static_pagerank(dg, cfg, None),
+            Approach::NaiveDynamic => {
+                self.naive_dynamic(dg, cfg, prev.expect("ND needs previous ranks"))
+            }
+            Approach::DynamicTraversal => self.dynamic_traversal(
+                dg,
+                g,
+                g_old,
+                cfg,
+                prev.expect("DT needs previous ranks"),
+                batch,
+            ),
+            Approach::DynamicFrontier => self.dynamic_frontier(
+                dg,
+                g,
+                cfg,
+                prev.expect("DF needs previous ranks"),
+                batch,
+                false,
+                PartitionMode::PartitionBothPull,
+                true,
+            ),
+            Approach::DynamicFrontierPruning => self.dynamic_frontier(
+                dg,
+                g,
+                cfg,
+                prev.expect("DF-P needs previous ranks"),
+                batch,
+                true,
+                PartitionMode::PartitionBothPull,
+                true,
+            ),
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! Rank error measurement (paper Section 5.1.5): L1 norm of the returned
+//! ranks against a reference static run at τ = 1e-100 capped at 500
+//! iterations.
+
+use super::config::PagerankConfig;
+use super::native::static_pagerank;
+use crate::graph::CsrGraph;
+
+/// L1 distance between two rank vectors.
+pub fn l1_distance(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+/// L∞ distance.
+pub fn linf_distance(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+/// Reference ranks per Section 5.1.5 (τ = 1e-100, 500 iterations).
+pub fn reference_ranks(g: &CsrGraph, gt: &CsrGraph) -> Vec<f64> {
+    static_pagerank(g, gt, &PagerankConfig::reference(), None).ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators::er;
+
+    #[test]
+    fn distances() {
+        let a = [0.5, 0.25, 0.25];
+        let b = [0.25, 0.5, 0.25];
+        assert_eq!(l1_distance(&a, &b), 0.5);
+        assert_eq!(linf_distance(&a, &b), 0.25);
+        assert_eq!(l1_distance(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn reference_tighter_than_default() {
+        let g = er::generate(200, 5.0, 1).to_csr();
+        let gt = g.transpose();
+        let reference = reference_ranks(&g, &gt);
+        let normal = static_pagerank(&g, &gt, &PagerankConfig::default(), None);
+        // default-τ run is close to the reference, but not beyond it
+        assert!(l1_distance(&normal.ranks, &reference) < 1e-7);
+    }
+}

@@ -1,0 +1,84 @@
+//! PageRank engines: the five approaches of the paper (Static,
+//! Naive-dynamic, Dynamic Traversal, Dynamic Frontier, DF with Pruning) on
+//! two substrates — [`native`] (multicore CPU, the paper's comparator [49])
+//! and [`device`] (the AOT-compiled artifacts on the PJRT "GPU") — plus the
+//! [`baselines`] modeling Hornet's and Gunrock's algorithmic choices.
+
+pub mod baselines;
+pub mod config;
+pub mod device;
+pub mod error;
+pub mod native;
+
+use std::time::Duration;
+
+/// The five ways to obtain ranks after a batch update (paper Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Approach {
+    /// Recompute from scratch (cold start).
+    Static,
+    /// Warm-start from the previous snapshot's ranks, process all vertices.
+    NaiveDynamic,
+    /// Warm-start + process only vertices reachable from the update (BFS).
+    DynamicTraversal,
+    /// Warm-start + incrementally expanding affected frontier.
+    DynamicFrontier,
+    /// Dynamic Frontier with Pruning (contracts the affected set too).
+    DynamicFrontierPruning,
+}
+
+impl Approach {
+    pub const ALL: [Approach; 5] = [
+        Approach::Static,
+        Approach::NaiveDynamic,
+        Approach::DynamicTraversal,
+        Approach::DynamicFrontier,
+        Approach::DynamicFrontierPruning,
+    ];
+
+    /// Parse a CLI name (static / nd / dt / df / dfp).
+    pub fn parse(s: &str) -> Option<Approach> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Some(Approach::Static),
+            "nd" | "naive-dynamic" => Some(Approach::NaiveDynamic),
+            "dt" | "dynamic-traversal" => Some(Approach::DynamicTraversal),
+            "df" | "dynamic-frontier" => Some(Approach::DynamicFrontier),
+            "dfp" | "df-p" | "dynamic-frontier-pruning" => {
+                Some(Approach::DynamicFrontierPruning)
+            }
+            _ => None,
+        }
+    }
+
+    /// Short label used in reports (matches the paper's figures).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Approach::Static => "Static",
+            Approach::NaiveDynamic => "ND",
+            Approach::DynamicTraversal => "DT",
+            Approach::DynamicFrontier => "DF",
+            Approach::DynamicFrontierPruning => "DF-P",
+        }
+    }
+}
+
+/// Outcome of one PageRank computation.
+#[derive(Debug, Clone)]
+pub struct PagerankResult {
+    /// Converged ranks, one per vertex.
+    pub ranks: Vec<f64>,
+    /// Power iterations executed.
+    pub iterations: usize,
+    /// Measured runtime per the paper's Section 5.1.5: includes
+    /// partitioning, initial affected marking and convergence detection;
+    /// excludes host<->device transfers and allocation.
+    pub elapsed: Duration,
+    /// Vertices initially marked affected (0 for Static/ND).
+    pub initially_affected: usize,
+}
+
+impl PagerankResult {
+    pub fn new(ranks: Vec<f64>, iterations: usize, elapsed: Duration) -> Self {
+        Self { ranks, iterations, elapsed, initially_affected: 0 }
+    }
+}

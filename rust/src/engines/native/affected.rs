@@ -1,0 +1,128 @@
+//! Affected-vertex marking (paper Algorithm 5 + the DT approach's BFS).
+
+use crate::batch::BatchUpdate;
+use crate::graph::CsrGraph;
+
+/// Algorithm 5 `initialAffected`: for each deletion (u,v), u's out-neighbors
+/// will be marked (δ_N[u]=1) and the target v is marked directly (δ_V[v]=1);
+/// for each insertion (u,v), u's out-neighbors will be marked. Returns
+/// (δ_V, δ_N) as u8 flags (the paper stores affected flags in 8-bit ints).
+pub fn initial_affected(n: usize, batch: &BatchUpdate) -> (Vec<u8>, Vec<u8>) {
+    let mut dv = vec![0u8; n];
+    let mut dn = vec![0u8; n];
+    for &(u, v) in &batch.deletions {
+        dn[u as usize] = 1;
+        dv[v as usize] = 1;
+    }
+    for &(u, _v) in &batch.insertions {
+        dn[u as usize] = 1;
+    }
+    (dv, dn)
+}
+
+/// Algorithm 5 `expandAffected`: mark out-neighbors of every vertex with
+/// δ_N set. Sequential here (the native engines call it on small frontiers;
+/// the device engines run the partitioned kernel instead).
+pub fn expand_affected(dv: &mut [u8], dn: &[u8], g: &CsrGraph) {
+    for u in 0..g.num_vertices() as u32 {
+        if dn[u as usize] != 0 {
+            for &v in g.neighbors(u) {
+                dv[v as usize] = 1;
+            }
+        }
+    }
+}
+
+/// The Dynamic Traversal approach's marking: flag everything reachable from
+/// the source vertex of each update, in either the old or new graph
+/// (Desikan et al.; paper Section 3.4.2). Plain BFS over both snapshots.
+pub fn dt_affected(g_new: &CsrGraph, g_old: &CsrGraph, batch: &BatchUpdate) -> Vec<u8> {
+    let n = g_new.num_vertices();
+    let mut aff = vec![0u8; n];
+    let mut queue: Vec<u32> = Vec::new();
+    for &(u, _) in batch.deletions.iter().chain(&batch.insertions) {
+        if aff[u as usize] == 0 {
+            aff[u as usize] = 1;
+            queue.push(u);
+        }
+    }
+    let mut head = 0;
+    while head < queue.len() {
+        let u = queue[head];
+        head += 1;
+        let both = g_new
+            .neighbors(u)
+            .iter()
+            .chain(if (u as usize) < g_old.num_vertices() {
+                g_old.neighbors(u).iter()
+            } else {
+                [].iter()
+            });
+        for &v in both {
+            if aff[v as usize] == 0 {
+                aff[v as usize] = 1;
+                queue.push(v);
+            }
+        }
+    }
+    aff
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn line_graph(n: usize) -> CsrGraph {
+        let mut b = GraphBuilder::new(n);
+        for v in 0..n - 1 {
+            b.insert_edge(v as u32, (v + 1) as u32);
+        }
+        b.ensure_self_loops();
+        b.to_csr()
+    }
+
+    #[test]
+    fn initial_marks_per_algorithm5() {
+        let batch = BatchUpdate {
+            deletions: vec![(1, 2)],
+            insertions: vec![(3, 4)],
+        };
+        let (dv, dn) = initial_affected(6, &batch);
+        assert_eq!(dv, vec![0, 0, 1, 0, 0, 0]); // deletion target
+        assert_eq!(dn, vec![0, 1, 0, 1, 0, 0]); // both sources
+    }
+
+    #[test]
+    fn expand_marks_out_neighbors() {
+        let g = line_graph(5);
+        let mut dv = vec![0u8; 5];
+        let dn = vec![0, 1, 0, 0, 0];
+        expand_affected(&mut dv, &dn, &g);
+        // vertex 1's out-neighbors: itself (self-loop) and 2
+        assert_eq!(dv, vec![0, 1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn dt_marks_reachable_suffix() {
+        let g = line_graph(6);
+        let batch = BatchUpdate { deletions: vec![], insertions: vec![(2, 3)] };
+        let aff = dt_affected(&g, &g, &batch);
+        assert_eq!(aff, vec![0, 0, 1, 1, 1, 1]); // everything from 2 onward
+    }
+
+    #[test]
+    fn dt_uses_old_graph_too() {
+        // old graph has edge 0 -> 5 that the new one lacks
+        let mut b_old = GraphBuilder::new(6);
+        b_old.insert_edge(0, 5);
+        b_old.ensure_self_loops();
+        let g_old = b_old.to_csr();
+        let mut b_new = GraphBuilder::new(6);
+        b_new.ensure_self_loops();
+        let g_new = b_new.to_csr();
+        let batch = BatchUpdate { deletions: vec![(0, 5)], insertions: vec![] };
+        let aff = dt_affected(&g_new, &g_old, &batch);
+        assert_eq!(aff[5], 1, "reachable in the old graph");
+    }
+}

@@ -1,0 +1,210 @@
+//! Native DT / DF / DF-P PageRank (paper Algorithms 2-3, CPU substrate).
+
+use std::time::Instant;
+
+use super::affected::{dt_affected, expand_affected, initial_affected};
+use super::pull_contrib;
+use crate::batch::BatchUpdate;
+use crate::engines::config::PagerankConfig;
+use crate::engines::PagerankResult;
+use crate::graph::CsrGraph;
+
+/// Dynamic Traversal: mark everything reachable from the update (BFS over
+/// old + new graph), then run masked Eq. 1 iterations over that fixed set.
+pub fn dynamic_traversal(
+    g: &CsrGraph,
+    gt: &CsrGraph,
+    g_old: &CsrGraph,
+    cfg: &PagerankConfig,
+    prev: &[f64],
+    batch: &BatchUpdate,
+) -> PagerankResult {
+    let n = g.num_vertices();
+    let start = Instant::now();
+    let aff = dt_affected(g, g_old, batch);
+    let initially_affected = aff.iter().filter(|&&x| x != 0).count();
+
+    let mut r = prev.to_vec();
+    let mut r_new = prev.to_vec();
+    let mut contrib = vec![0.0f64; n];
+    let c0 = (1.0 - cfg.alpha) / n as f64;
+
+    let mut iterations = 0;
+    for _ in 0..cfg.max_iterations {
+        for (u, c) in contrib.iter_mut().enumerate() {
+            *c = r[u] / g.degree(u as u32) as f64;
+        }
+        let mut linf = 0.0f64;
+        for (v, out) in r_new.iter_mut().enumerate() {
+            if aff[v] == 0 {
+                *out = r[v];
+                continue;
+            }
+            let c = pull_contrib(gt, &contrib, v as u32);
+            let nr = c0 + cfg.alpha * c;
+            linf = linf.max((nr - r[v]).abs());
+            *out = nr;
+        }
+        std::mem::swap(&mut r, &mut r_new);
+        iterations += 1;
+        if linf <= cfg.tau {
+            break;
+        }
+    }
+    PagerankResult { ranks: r, iterations, elapsed: start.elapsed(), initially_affected }
+}
+
+/// Dynamic Frontier (`prune = false`) and DF with Pruning (`prune = true`):
+/// Algorithm 2 with the Algorithm 3 update rule — Eq. 1 for DF, the
+/// closed-loop Eq. 2 for DF-P; frontier expansion deferred to a separate
+/// pass after each iteration, exactly as the GPU implementation does.
+pub fn dynamic_frontier(
+    g: &CsrGraph,
+    gt: &CsrGraph,
+    cfg: &PagerankConfig,
+    prev: &[f64],
+    batch: &BatchUpdate,
+    prune: bool,
+) -> PagerankResult {
+    let n = g.num_vertices();
+    let start = Instant::now();
+
+    let (mut dv, mut dn) = initial_affected(n, batch);
+    expand_affected(&mut dv, &dn, g);
+    let initially_affected = dv.iter().filter(|&&x| x != 0).count();
+
+    let mut r = prev.to_vec();
+    let mut r_new = prev.to_vec();
+    let mut contrib = vec![0.0f64; n];
+    let c0 = (1.0 - cfg.alpha) / n as f64;
+
+    let mut iterations = 0;
+    for _ in 0..cfg.max_iterations {
+        for (u, c) in contrib.iter_mut().enumerate() {
+            *c = r[u] / g.degree(u as u32) as f64;
+        }
+        dn.iter_mut().for_each(|x| *x = 0);
+
+        let mut linf = 0.0f64;
+        for v in 0..n {
+            if dv[v] == 0 {
+                r_new[v] = r[v];
+                continue;
+            }
+            let c = pull_contrib(gt, &contrib, v as u32);
+            let d_v = g.degree(v as u32) as f64;
+            let nr = if prune {
+                // Eq. 2: K excludes the self-loop term of the old rank.
+                let k = c - r[v] / d_v;
+                (cfg.alpha * k + c0) / (1.0 - cfg.alpha / d_v)
+            } else {
+                c0 + cfg.alpha * c
+            };
+            let delta = (nr - r[v]).abs();
+            let denom = nr.max(r[v]);
+            let rel = if denom > 0.0 { delta / denom } else { 0.0 };
+            if prune && rel <= cfg.tau_prune {
+                dv[v] = 0; // contract the affected set
+            }
+            if rel > cfg.tau_frontier {
+                dn[v] = 1; // expand later via expandAffected
+            }
+            r_new[v] = nr;
+            linf = linf.max(delta);
+        }
+
+        std::mem::swap(&mut r, &mut r_new);
+        iterations += 1;
+        if linf <= cfg.tau {
+            break;
+        }
+        expand_affected(&mut dv, &dn, g);
+    }
+    PagerankResult { ranks: r, iterations, elapsed: start.elapsed(), initially_affected }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch;
+    use crate::engines::native::static_pagerank;
+    use crate::generators::er;
+
+    fn l1(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+    }
+
+    fn setup(n: usize, seed: u64) -> (crate::graph::GraphBuilder, Vec<f64>, PagerankConfig) {
+        let b = er::generate(n, 5.0, seed);
+        let g = b.to_csr();
+        let gt = g.transpose();
+        let cfg = PagerankConfig::default();
+        let prev = static_pagerank(&g, &gt, &cfg, None).ranks;
+        (b, prev, cfg)
+    }
+
+    #[test]
+    fn df_and_dfp_track_static_after_update() {
+        for seed in [1u64, 2, 3] {
+            let (mut b, prev, cfg) = setup(400, seed);
+            let old_g = b.to_csr();
+            let upd = batch::random_batch(&b, 10, 0.8, seed + 50);
+            batch::apply(&mut b, &upd);
+            let g = b.to_csr();
+            let gt = g.transpose();
+            let want = static_pagerank(&g, &gt, &cfg, None).ranks;
+
+            for prune in [false, true] {
+                let res = dynamic_frontier(&g, &gt, &cfg, &prev, &upd, prune);
+                let err = l1(&res.ranks, &want);
+                assert!(err < 1e-3, "prune={prune} seed={seed} err={err}");
+                assert!(res.initially_affected > 0);
+            }
+            let res = dynamic_traversal(&g, &gt, &old_g, &cfg, &prev, &upd);
+            assert!(l1(&res.ranks, &want) < 1e-6, "DT tracks static closely");
+        }
+    }
+
+    #[test]
+    fn dt_affected_superset_of_df_initial() {
+        let (mut b, _prev, _cfg) = setup(300, 9);
+        let old_g = b.to_csr();
+        let upd = batch::random_batch(&b, 5, 0.8, 99);
+        batch::apply(&mut b, &upd);
+        let g = b.to_csr();
+        let dt = dt_affected(&g, &old_g, &upd);
+        let (mut dv, dn) = initial_affected(g.num_vertices(), &upd);
+        expand_affected(&mut dv, &dn, &g);
+        // DF's initial affected (minus deletion targets, which DT only
+        // reaches if connected) is reachable from update sources -> subset.
+        for v in 0..g.num_vertices() {
+            if dv[v] != 0 && upd.deletions.iter().all(|&(_, t)| t as usize != v) {
+                assert_eq!(dt[v], 1, "vertex {v} in DF init but not DT");
+            }
+        }
+    }
+
+    #[test]
+    fn df_fewer_iterations_than_cold_static() {
+        let (mut b, prev, cfg) = setup(600, 4);
+        let upd = batch::random_batch(&b, 3, 1.0, 123);
+        batch::apply(&mut b, &upd);
+        let g = b.to_csr();
+        let gt = g.transpose();
+        let cold = static_pagerank(&g, &gt, &cfg, None);
+        let df = dynamic_frontier(&g, &gt, &cfg, &prev, &upd, false);
+        assert!(df.iterations <= cold.iterations);
+    }
+
+    #[test]
+    fn empty_batch_converges_immediately() {
+        let (b, prev, cfg) = setup(200, 11);
+        let g = b.to_csr();
+        let gt = g.transpose();
+        let upd = BatchUpdate::default();
+        let res = dynamic_frontier(&g, &gt, &cfg, &prev, &upd, true);
+        assert_eq!(res.initially_affected, 0);
+        assert!(res.iterations <= 1);
+        assert_eq!(l1(&res.ranks, &prev), 0.0);
+    }
+}

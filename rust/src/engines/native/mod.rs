@@ -1,0 +1,149 @@
+//! Native (multicore CPU) engines — the paper's parallel CPU comparator
+//! [49], used directly for the GPU-vs-CPU comparisons (Figures 6-8) and as
+//! the fallback for graphs larger than the biggest device tier.
+//!
+//! All five approaches use the same synchronous pull-based formulation as
+//! the device engines: two rank vectors, one write per vertex per
+//! iteration, L∞ convergence detection.
+
+pub mod affected;
+pub mod asynchronous;
+pub mod dynamic;
+
+use std::time::Instant;
+
+use super::config::PagerankConfig;
+use super::PagerankResult;
+use crate::graph::CsrGraph;
+
+/// c[v] = Σ_{u ∈ G.in(v)} r[u]/outdeg(u) for one vertex, pulled over the
+/// transpose adjacency.
+#[inline]
+pub(crate) fn pull_contrib(gt: &CsrGraph, contrib: &[f64], v: u32) -> f64 {
+    gt.neighbors(v).iter().map(|&u| contrib[u as usize]).sum()
+}
+
+/// One synchronous iteration of Eq. 1 over all vertices. Returns the L∞
+/// delta. `contrib[u]` must hold `r[u]/outdeg(u)`.
+fn step_plain(
+    gt: &CsrGraph,
+    contrib: &[f64],
+    r: &[f64],
+    r_new: &mut [f64],
+    c0: f64,
+    alpha: f64,
+) -> f64 {
+    let mut linf = 0.0f64;
+    for (v, out) in r_new.iter_mut().enumerate() {
+        let c = pull_contrib(gt, contrib, v as u32);
+        let nr = c0 + alpha * c;
+        linf = linf.max((nr - r[v]).abs());
+        *out = nr;
+    }
+    linf
+}
+
+/// Static PageRank (Algorithm 1): cold start from 1/|V|, or warm start from
+/// `r0` (the Naive-dynamic approach — identical loop, different init).
+pub fn static_pagerank(
+    g: &CsrGraph,
+    gt: &CsrGraph,
+    cfg: &PagerankConfig,
+    r0: Option<&[f64]>,
+) -> PagerankResult {
+    let n = g.num_vertices();
+    debug_assert!(g.has_no_dead_ends());
+    let start = Instant::now();
+
+    let mut r: Vec<f64> = match r0 {
+        Some(prev) => prev.to_vec(),
+        None => vec![1.0 / n as f64; n],
+    };
+    let mut r_new = vec![0.0f64; n];
+    let mut contrib = vec![0.0f64; n];
+    let c0 = (1.0 - cfg.alpha) / n as f64;
+
+    let mut iterations = 0;
+    for _ in 0..cfg.max_iterations {
+        for (u, c) in contrib.iter_mut().enumerate() {
+            *c = r[u] / g.degree(u as u32) as f64;
+        }
+        let linf = step_plain(gt, &contrib, &r, &mut r_new, c0, cfg.alpha);
+        std::mem::swap(&mut r, &mut r_new);
+        iterations += 1;
+        if linf <= cfg.tau {
+            break;
+        }
+    }
+    PagerankResult::new(r, iterations, start.elapsed())
+}
+
+/// Naive-dynamic: warm start from the previous snapshot's ranks.
+pub fn naive_dynamic(
+    g: &CsrGraph,
+    gt: &CsrGraph,
+    cfg: &PagerankConfig,
+    prev: &[f64],
+) -> PagerankResult {
+    static_pagerank(g, gt, cfg, Some(prev))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators::er;
+
+    fn ranks_sum_to_one(r: &[f64]) -> bool {
+        (r.iter().sum::<f64>() - 1.0).abs() < 1e-6
+    }
+
+    #[test]
+    fn static_converges_on_ring() {
+        // symmetric ring: uniform ranks
+        let n = 10;
+        let mut adj: Vec<Vec<u32>> = (0..n)
+            .map(|v| vec![v as u32, ((v + 1) % n) as u32])
+            .collect();
+        adj[0].sort_unstable();
+        let g = CsrGraph::from_adjacency(&adj);
+        let gt = g.transpose();
+        let res = static_pagerank(&g, &gt, &PagerankConfig::default(), None);
+        assert!(res.iterations < 100);
+        for &x in &res.ranks {
+            assert!((x - 0.1).abs() < 1e-9, "{x}");
+        }
+    }
+
+    #[test]
+    fn static_sums_to_one_random() {
+        let g = er::generate(500, 5.0, 3).to_csr();
+        let gt = g.transpose();
+        let res = static_pagerank(&g, &gt, &PagerankConfig::default(), None);
+        assert!(ranks_sum_to_one(&res.ranks));
+        assert!(res.iterations > 5 && res.iterations < 200);
+    }
+
+    #[test]
+    fn warm_start_converges_faster() {
+        let g = er::generate(800, 5.0, 7).to_csr();
+        let gt = g.transpose();
+        let cfg = PagerankConfig::default();
+        let cold = static_pagerank(&g, &gt, &cfg, None);
+        let warm = static_pagerank(&g, &gt, &cfg, Some(&cold.ranks));
+        assert!(warm.iterations <= 2, "warm restart on same graph: {}", warm.iterations);
+    }
+
+    #[test]
+    fn higher_indegree_higher_rank() {
+        // star: everyone points at 0
+        let n = 20usize;
+        let mut adj: Vec<Vec<u32>> = (0..n).map(|v| vec![v as u32]).collect();
+        for v in 1..n {
+            adj[v].push(0);
+        }
+        let g = CsrGraph::from_adjacency(&adj);
+        let gt = g.transpose();
+        let res = static_pagerank(&g, &gt, &PagerankConfig::default(), None);
+        assert!(res.ranks[0] > res.ranks[1] * 5.0);
+    }
+}

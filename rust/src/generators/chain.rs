@@ -1,0 +1,52 @@
+//! Protein k-mer-like generator (kmer_A2a / kmer_V1r stand-ins): long
+//! near-linear chains with occasional branches — degree ~3, enormous
+//! diameter, many weakly-connected components. Structurally these behave
+//! like the GenBank k-mer graphs in the paper's Table 4.
+
+use crate::graph::{GraphBuilder, VertexId};
+use crate::util::Rng;
+
+/// `n` vertices arranged in `n / chain_len` chains with ~5% branch points.
+pub fn generate(n: usize, chain_len: usize, seed: u64) -> GraphBuilder {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut b = GraphBuilder::new(n);
+    let mut v = 0usize;
+    while v + 1 < n {
+        let end = (v + chain_len).min(n - 1);
+        for u in v..end {
+            b.insert_edge(u as VertexId, (u + 1) as VertexId);
+            b.insert_edge((u + 1) as VertexId, u as VertexId);
+            // branch: fork to a random earlier vertex of this chain
+            if u > v + 2 && rng.gen_f64() < 0.05 {
+                let t = (v + rng.gen_range(u - v)) as VertexId;
+                b.insert_edge(u as VertexId, t);
+                b.insert_edge(t, u as VertexId);
+            }
+        }
+        v = end + 1;
+    }
+    b.ensure_self_loops();
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_shape() {
+        let g = generate(2000, 100, 7).to_csr();
+        assert_eq!(g.num_vertices(), 2000);
+        let avg = g.num_edges() as f64 / 2000.0;
+        assert!(avg > 2.5 && avg < 4.0, "avg degree {avg}");
+        assert!(g.has_no_dead_ends());
+    }
+
+    #[test]
+    fn max_degree_small() {
+        let g = generate(1000, 50, 1).to_csr();
+        let gt = g.transpose();
+        let max_in = gt.degrees().into_iter().max().unwrap();
+        assert!(max_in < 12, "k-mer graphs have no hubs, got {max_in}");
+    }
+}

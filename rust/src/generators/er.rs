@@ -1,0 +1,32 @@
+//! Erdős–Rényi G(n, m) generator — the neutral workload used by unit and
+//! property tests (no structural signature to bias an approach).
+
+use crate::graph::{GraphBuilder, VertexId};
+use crate::util::Rng;
+
+/// ~`avg_deg * n` random directed edges (duplicates dropped) + self-loops.
+pub fn generate(n: usize, avg_deg: f64, seed: u64) -> GraphBuilder {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut b = GraphBuilder::new(n);
+    let m = (avg_deg * n as f64) as usize;
+    for _ in 0..m {
+        let u = rng.gen_range(n) as VertexId;
+        let v = rng.gen_range(n) as VertexId;
+        b.insert_edge(u, v);
+    }
+    b.ensure_self_loops();
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape() {
+        let g = generate(500, 4.0, 11).to_csr();
+        assert_eq!(g.num_vertices(), 500);
+        assert!(g.has_no_dead_ends());
+        assert!(g.num_edges() >= 500); // at least the self-loops
+    }
+}

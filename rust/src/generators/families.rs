@@ -1,0 +1,113 @@
+//! Named dataset stand-ins for the paper's Table 4 (12 large static graphs).
+//!
+//! Each entry mirrors one SuiteSparse graph: same family (web / social /
+//! road / k-mer), same relative size ordering and average-degree class,
+//! scaled to fit the largest device tier (t16: V < 65536, E <= 2^20 with
+//! head-room for insertion batches). The structural signature — power-law
+//! hubs for web/social, low-degree large-diameter lattices/chains for
+//! road/k-mer — is what drives every per-family effect in the paper's
+//! evaluation, and is preserved.
+
+use crate::graph::GraphBuilder;
+
+use super::{chain, grid, rmat};
+
+/// Dataset family, following Table 4's grouping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Web,
+    Social,
+    Road,
+    Kmer,
+}
+
+/// A named synthetic stand-in for one of the paper's graphs.
+#[derive(Clone, Copy)]
+pub struct Dataset {
+    /// Paper's dataset name this stands in for.
+    pub name: &'static str,
+    pub family: Family,
+    /// Generator seed (fixed: datasets are reproducible artifacts).
+    pub seed: u64,
+    build: fn(u64) -> GraphBuilder,
+}
+
+impl Dataset {
+    pub fn build(&self) -> GraphBuilder {
+        (self.build)(self.seed)
+    }
+}
+
+impl std::fmt::Debug for Dataset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Dataset")
+            .field("name", &self.name)
+            .field("family", &self.family)
+            .finish()
+    }
+}
+
+macro_rules! web {
+    ($scale:expr, $deg:expr) => {
+        |seed| rmat::generate($scale, $deg, rmat::RmatParams::WEB, seed)
+    };
+}
+macro_rules! social {
+    ($scale:expr, $deg:expr) => {
+        |seed| rmat::generate($scale, $deg, rmat::RmatParams::SOCIAL, seed)
+    };
+}
+
+/// Table 4 stand-ins, in the paper's order.
+pub const DATASETS: &[Dataset] = &[
+    Dataset { name: "indochina-2004", family: Family::Web, seed: 101, build: web!(14, 12.0) },
+    Dataset { name: "arabic-2005", family: Family::Web, seed: 102, build: web!(15, 13.0) },
+    Dataset { name: "uk-2005", family: Family::Web, seed: 103, build: web!(15, 11.0) },
+    Dataset { name: "webbase-2001", family: Family::Web, seed: 104, build: web!(15, 5.0) },
+    Dataset { name: "it-2004", family: Family::Web, seed: 105, build: web!(14, 14.0) },
+    Dataset { name: "sk-2005", family: Family::Web, seed: 106, build: web!(15, 16.0) },
+    Dataset { name: "com-LiveJournal", family: Family::Social, seed: 107, build: social!(14, 9.0) },
+    Dataset { name: "com-Orkut", family: Family::Social, seed: 108, build: social!(13, 38.0) },
+    Dataset { name: "asia_osm", family: Family::Road, seed: 109, build: |s| grid::generate(128, 96, s) },
+    Dataset { name: "europe_osm", family: Family::Road, seed: 110, build: |s| grid::generate(224, 224, s) },
+    Dataset { name: "kmer_A2a", family: Family::Kmer, seed: 111, build: |s| chain::generate(40_000, 120, s) },
+    Dataset { name: "kmer_V1r", family: Family::Kmer, seed: 112, build: |s| chain::generate(52_000, 150, s) },
+];
+
+/// Look up a stand-in by (paper) name.
+pub fn dataset(name: &str) -> Option<&'static Dataset> {
+    DATASETS.iter().find(|d| d.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_datasets_build_and_fit_t16() {
+        for d in DATASETS {
+            let g = d.build().to_csr();
+            assert!(g.num_vertices() < 65_535, "{} too many vertices", d.name);
+            assert!(g.num_edges() < 900_000, "{} too many edges", d.name);
+            assert!(g.has_no_dead_ends(), "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(dataset("sk-2005").is_some());
+        assert!(dataset("nope").is_none());
+        assert_eq!(dataset("asia_osm").unwrap().family, Family::Road);
+    }
+
+    #[test]
+    fn family_signatures() {
+        // web: hubby; road: flat
+        let web = dataset("it-2004").unwrap().build().to_csr().transpose();
+        let road = dataset("asia_osm").unwrap().build().to_csr().transpose();
+        let max_web = web.degrees().into_iter().max().unwrap();
+        let max_road = road.degrees().into_iter().max().unwrap();
+        assert!(max_web > 100, "web hub {max_web}");
+        assert!(max_road < 12, "road max degree {max_road}");
+    }
+}

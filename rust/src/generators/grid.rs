@@ -1,0 +1,68 @@
+//! Road-network-like generator (asia_osm / europe_osm stand-ins): a 2D grid
+//! with bidirectional edges, a small fraction of random diagonal shortcuts,
+//! and random holes — low average degree (~3), huge diameter. These are the
+//! graphs where the paper's DT approach collapses (everything is reachable
+//! but convergence is traversal-bound).
+
+use crate::graph::{GraphBuilder, VertexId};
+use crate::util::Rng;
+
+/// `rows x cols` grid; `hole_frac` of vertices keep no lateral edges
+/// (intersections removed), `shortcut_frac` adds highway-like skips.
+pub fn generate(rows: usize, cols: usize, seed: u64) -> GraphBuilder {
+    let n = rows * cols;
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut b = GraphBuilder::new(n);
+    let id = |r: usize, c: usize| (r * cols + c) as VertexId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols && rng.gen_f64() > 0.05 {
+                b.insert_edge(id(r, c), id(r, c + 1));
+                b.insert_edge(id(r, c + 1), id(r, c));
+            }
+            if r + 1 < rows && rng.gen_f64() > 0.05 {
+                b.insert_edge(id(r, c), id(r + 1, c));
+                b.insert_edge(id(r + 1, c), id(r, c));
+            }
+        }
+    }
+    // sparse highway shortcuts (~0.5% of vertices)
+    for _ in 0..(n / 200).max(1) {
+        let u = rng.gen_range(n) as VertexId;
+        let v = rng.gen_range(n) as VertexId;
+        b.insert_edge(u, v);
+        b.insert_edge(v, u);
+    }
+    b.ensure_self_loops();
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_degree_large_graph() {
+        let g = generate(32, 32, 3).to_csr();
+        assert_eq!(g.num_vertices(), 1024);
+        let avg = g.num_edges() as f64 / 1024.0;
+        assert!(avg > 2.0 && avg < 6.0, "avg degree {avg}");
+        assert!(g.has_no_dead_ends());
+    }
+
+    #[test]
+    fn mostly_symmetric() {
+        let g = generate(16, 16, 5).to_csr();
+        let mut sym = 0;
+        let mut tot = 0;
+        for (u, v) in g.edges() {
+            if u != v {
+                tot += 1;
+                if g.neighbors(v).contains(&u) {
+                    sym += 1;
+                }
+            }
+        }
+        assert!(sym as f64 / tot as f64 > 0.99);
+    }
+}

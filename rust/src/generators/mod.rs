@@ -1,0 +1,15 @@
+//! Synthetic graph generators — stand-ins for the paper's datasets.
+//!
+//! We do not ship the multi-gigabyte SuiteSparse / SNAP graphs of Tables 3-4;
+//! per DESIGN.md §3 each dataset *family* is reproduced by a generator with
+//! the same structural signature (degree distribution, diameter class),
+//! which is what drives the paper's per-family effects (e.g. DT collapsing
+//! on road/k-mer graphs, DF-P winning on low-degree graphs).
+
+pub mod chain;
+pub mod er;
+pub mod families;
+pub mod grid;
+pub mod rmat;
+
+pub use families::{dataset, Dataset, DATASETS};

@@ -1,0 +1,91 @@
+//! R-MAT recursive-matrix generator (Chakrabarti et al.): power-law in/out
+//! degrees with community structure. Parameterized to mimic web crawls
+//! (skewed, a≈0.57) and social networks (denser, more symmetric).
+
+use crate::graph::{GraphBuilder, VertexId};
+use crate::util::Rng;
+
+/// R-MAT quadrant probabilities (a + b + c + d = 1).
+#[derive(Debug, Clone, Copy)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl RmatParams {
+    /// Web-graph-like skew (indochina/arabic/uk/webbase/it/sk stand-ins).
+    pub const WEB: RmatParams = RmatParams { a: 0.57, b: 0.19, c: 0.19 };
+    /// Social-network-like (LiveJournal/Orkut stand-ins).
+    pub const SOCIAL: RmatParams = RmatParams { a: 0.45, b: 0.22, c: 0.22 };
+}
+
+/// Generate an R-MAT digraph with `n = 2^scale` vertices and ~`avg_deg * n`
+/// edges (duplicates dropped), self-loops added.
+pub fn generate(scale: u32, avg_deg: f64, params: RmatParams, seed: u64) -> GraphBuilder {
+    let n: usize = 1 << scale;
+    let m = (avg_deg * n as f64) as usize;
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut b = GraphBuilder::new(n);
+    let RmatParams { a, b: pb, c } = params;
+    for _ in 0..m {
+        let (mut lo_u, mut lo_v) = (0usize, 0usize);
+        let mut half = n >> 1;
+        while half > 0 {
+            let r: f64 = rng.gen_f64();
+            // add per-level noise so degree sequence is not too regular
+            let (u_hi, v_hi) = if r < a {
+                (false, false)
+            } else if r < a + pb {
+                (false, true)
+            } else if r < a + pb + c {
+                (true, false)
+            } else {
+                (true, true)
+            };
+            if u_hi {
+                lo_u += half;
+            }
+            if v_hi {
+                lo_v += half;
+            }
+            half >>= 1;
+        }
+        b.insert_edge(lo_u as VertexId, lo_v as VertexId);
+    }
+    b.ensure_self_loops();
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_shape() {
+        let g = generate(8, 4.0, RmatParams::WEB, 42).to_csr();
+        assert_eq!(g.num_vertices(), 256);
+        // ~4*256 edges + up to 256 self loops, minus duplicates
+        assert!(g.num_edges() > 700 && g.num_edges() <= 256 * 4 + 256);
+        assert!(g.has_no_dead_ends());
+    }
+
+    #[test]
+    fn power_law_skew() {
+        let g = generate(10, 8.0, RmatParams::WEB, 1).to_csr();
+        let gt = g.transpose();
+        let mut degs = gt.degrees();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        // hub in-degree far above average
+        assert!(degs[0] as f64 > 4.0 * (g.num_edges() as f64 / 1024.0));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(7, 4.0, RmatParams::SOCIAL, 9).to_csr();
+        let b = generate(7, 4.0, RmatParams::SOCIAL, 9).to_csr();
+        assert_eq!(a, b);
+        let c = generate(7, 4.0, RmatParams::SOCIAL, 10).to_csr();
+        assert_ne!(a, c);
+    }
+}

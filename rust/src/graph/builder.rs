@@ -1,0 +1,150 @@
+//! Mutable adjacency for dynamic graphs: the coordinator applies batch
+//! updates here and snapshots to CSR for each PageRank run.
+//!
+//! Matches the paper's loading protocol (Section 5.1.4): after construction
+//! and after every batch update, `ensure_self_loops` eliminates dead ends by
+//! giving every vertex a self-loop.
+
+use super::{CsrGraph, VertexId};
+
+/// Mutable out-adjacency with O(deg) edge insert/remove and duplicate
+/// detection (static edge semantics: at most one copy of each (u, v)).
+#[derive(Debug, Clone, Default)]
+pub struct GraphBuilder {
+    adj: Vec<Vec<VertexId>>,
+    num_edges: usize,
+}
+
+impl GraphBuilder {
+    /// Empty graph with `n` vertices.
+    pub fn new(n: usize) -> Self {
+        Self { adj: vec![Vec::new(); n], num_edges: 0 }
+    }
+
+    /// Build from an existing edge list, dropping duplicates.
+    pub fn from_edges(n: usize, edges: impl IntoIterator<Item = (VertexId, VertexId)>) -> Self {
+        let mut b = Self::new(n);
+        for (u, v) in edges {
+            b.insert_edge(u, v);
+        }
+        b
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    pub fn out_neighbors(&self, u: VertexId) -> &[VertexId] {
+        &self.adj[u as usize]
+    }
+
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        self.adj[u as usize].contains(&v)
+    }
+
+    /// Insert (u, v); returns false if it already existed.
+    pub fn insert_edge(&mut self, u: VertexId, v: VertexId) -> bool {
+        assert!((u as usize) < self.adj.len() && (v as usize) < self.adj.len());
+        let row = &mut self.adj[u as usize];
+        if row.contains(&v) {
+            return false;
+        }
+        row.push(v);
+        self.num_edges += 1;
+        true
+    }
+
+    /// Remove (u, v); returns false if it was absent. Self-loops are
+    /// protected: they model dead-end elimination and are never removed.
+    pub fn remove_edge(&mut self, u: VertexId, v: VertexId) -> bool {
+        if u == v {
+            return false;
+        }
+        let row = &mut self.adj[u as usize];
+        if let Some(pos) = row.iter().position(|&x| x == v) {
+            row.swap_remove(pos);
+            self.num_edges -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Add a self-loop to every vertex that lacks one (paper Section 5.1.4:
+    /// self-loops are (re-)added alongside every batch update).
+    pub fn ensure_self_loops(&mut self) {
+        for v in 0..self.adj.len() {
+            let vid = v as VertexId;
+            if !self.adj[v].contains(&vid) {
+                self.adj[v].push(vid);
+                self.num_edges += 1;
+            }
+        }
+    }
+
+    /// Snapshot to immutable CSR.
+    pub fn to_csr(&self) -> CsrGraph {
+        CsrGraph::from_adjacency(&self.adj)
+    }
+
+    /// All edges, in adjacency order.
+    pub fn edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        self.adj.iter().enumerate().flat_map(|(u, vs)| {
+            vs.iter().map(move |&v| (u as VertexId, v))
+        })
+    }
+
+    /// Non-self-loop edges (the candidates for random deletion batches).
+    pub fn real_edges(&self) -> Vec<(VertexId, VertexId)> {
+        self.edges().filter(|&(u, v)| u != v).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let mut b = GraphBuilder::new(4);
+        assert!(b.insert_edge(0, 1));
+        assert!(!b.insert_edge(0, 1)); // duplicate
+        assert!(b.insert_edge(1, 2));
+        assert_eq!(b.num_edges(), 2);
+        assert!(b.remove_edge(0, 1));
+        assert!(!b.remove_edge(0, 1)); // absent
+        assert_eq!(b.num_edges(), 1);
+        assert!(b.has_edge(1, 2));
+    }
+
+    #[test]
+    fn self_loops_added_once_and_protected() {
+        let mut b = GraphBuilder::from_edges(3, [(0, 1), (1, 2)]);
+        b.ensure_self_loops();
+        assert_eq!(b.num_edges(), 5);
+        b.ensure_self_loops(); // idempotent
+        assert_eq!(b.num_edges(), 5);
+        assert!(!b.remove_edge(2, 2)); // protected
+        assert!(b.has_edge(2, 2));
+        assert!(b.to_csr().has_no_dead_ends());
+    }
+
+    #[test]
+    fn csr_snapshot_matches() {
+        let mut b = GraphBuilder::from_edges(3, [(0, 1), (1, 2), (2, 0)]);
+        b.ensure_self_loops();
+        let g = b.to_csr();
+        assert_eq!(g.num_edges(), b.num_edges());
+        for v in 0..3u32 {
+            let mut a = b.out_neighbors(v).to_vec();
+            let mut c = g.neighbors(v).to_vec();
+            a.sort_unstable();
+            c.sort_unstable();
+            assert_eq!(a, c);
+        }
+    }
+}

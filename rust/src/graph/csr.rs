@@ -1,0 +1,197 @@
+//! Compressed Sparse Row graph storage.
+//!
+//! The paper computes ranks by pulling over the *transpose* of the current
+//! graph (in-neighbors) and expands frontiers by pushing over the graph
+//! itself (out-neighbors); [`CsrGraph`] stores one direction and
+//! [`CsrGraph::transpose`] produces the other.
+
+use super::VertexId;
+
+/// Immutable CSR adjacency: `targets[offsets[v]..offsets[v+1]]` are the
+/// neighbors of `v` (out-neighbors by convention; a transposed instance
+/// holds in-neighbors).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CsrGraph {
+    offsets: Vec<u64>,
+    targets: Vec<VertexId>,
+}
+
+impl CsrGraph {
+    /// Build from per-vertex adjacency lists.
+    pub fn from_adjacency(adj: &[Vec<VertexId>]) -> Self {
+        let n = adj.len();
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut total = 0u64;
+        offsets.push(0);
+        for nbrs in adj {
+            total += nbrs.len() as u64;
+            offsets.push(total);
+        }
+        let mut targets = Vec::with_capacity(total as usize);
+        for nbrs in adj {
+            targets.extend_from_slice(nbrs);
+        }
+        Self { offsets, targets }
+    }
+
+    /// Build from an edge list (`n` fixes the vertex count; isolated vertices
+    /// get empty rows). Uses a counting pass + placement pass, no sorting.
+    pub fn from_edges(n: usize, edges: &[(VertexId, VertexId)]) -> Self {
+        let mut counts = vec![0u64; n + 1];
+        for &(u, _) in edges {
+            counts[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let mut targets = vec![0 as VertexId; edges.len()];
+        for &(u, v) in edges {
+            let c = &mut cursor[u as usize];
+            targets[*c as usize] = v;
+            *c += 1;
+        }
+        Self { offsets, targets }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of (directed) edges, self-loops included.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Neighbors of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.targets[s..e]
+    }
+
+    /// Degree of `v` in this direction.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> u32 {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as u32
+    }
+
+    /// All degrees.
+    pub fn degrees(&self) -> Vec<u32> {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.degree(v))
+            .collect()
+    }
+
+    /// Transposed graph (in-neighbors become out-neighbors).
+    pub fn transpose(&self) -> CsrGraph {
+        let n = self.num_vertices();
+        let mut counts = vec![0u64; n + 1];
+        for &t in &self.targets {
+            counts[t as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let mut targets = vec![0 as VertexId; self.targets.len()];
+        for u in 0..n {
+            for &v in self.neighbors(u as VertexId) {
+                let c = &mut cursor[v as usize];
+                targets[*c as usize] = u as VertexId;
+                *c += 1;
+            }
+        }
+        CsrGraph { offsets, targets }
+    }
+
+    /// Iterate all edges `(u, v)`.
+    pub fn edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        (0..self.num_vertices() as VertexId).flat_map(move |u| {
+            self.neighbors(u).iter().map(move |&v| (u, v))
+        })
+    }
+
+    /// True if every vertex has at least one out-edge (no dead ends). The
+    /// paper eliminates dead ends by adding self-loops at load time.
+    pub fn has_no_dead_ends(&self) -> bool {
+        (0..self.num_vertices() as VertexId).all(|v| self.degree(v) > 0)
+    }
+
+    /// Raw offsets (for packing into device formats).
+    #[inline]
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    /// Raw targets.
+    #[inline]
+    pub fn targets(&self) -> &[VertexId] {
+        &self.targets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> CsrGraph {
+        // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3, 3 -> 0
+        CsrGraph::from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3), (3, 0)])
+    }
+
+    #[test]
+    fn from_edges_basic() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 5);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(3), &[0]);
+        assert_eq!(g.degree(1), 1);
+    }
+
+    #[test]
+    fn from_adjacency_matches_from_edges() {
+        let adj = vec![vec![1, 2], vec![3], vec![3], vec![0]];
+        assert_eq!(CsrGraph::from_adjacency(&adj), diamond());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let g = diamond();
+        let gt = g.transpose();
+        assert_eq!(gt.neighbors(3), &[1, 2]);
+        assert_eq!(gt.neighbors(0), &[3]);
+        // double transpose preserves edge multiset per vertex
+        let gtt = gt.transpose();
+        for v in 0..4 {
+            let mut a = g.neighbors(v).to_vec();
+            let mut b = gtt.neighbors(v).to_vec();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn dead_end_detection() {
+        let g = CsrGraph::from_edges(3, &[(0, 1), (1, 0)]);
+        assert!(!g.has_no_dead_ends()); // vertex 2 has no out-edge
+        let g2 = CsrGraph::from_edges(3, &[(0, 1), (1, 0), (2, 2)]);
+        assert!(g2.has_no_dead_ends());
+    }
+
+    #[test]
+    fn edges_iterator_counts() {
+        let g = diamond();
+        let edges: Vec<_> = g.edges().collect();
+        assert_eq!(edges.len(), g.num_edges());
+        assert!(edges.contains(&(0, 2)));
+    }
+}

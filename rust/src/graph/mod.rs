@@ -1,0 +1,13 @@
+//! Graph substrates: CSR storage, a mutable builder for dynamic updates,
+//! and degree partitioning (the paper's Algorithm 4).
+
+pub mod builder;
+pub mod csr;
+pub mod partition;
+
+pub use builder::GraphBuilder;
+pub use csr::CsrGraph;
+pub use partition::{partition_by_degree, Partition};
+
+/// Vertex ids are 32-bit, as in the paper (Section 5.1.2).
+pub type VertexId = u32;

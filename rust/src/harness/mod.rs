@@ -1,0 +1,8 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md §5 for the experiment index). Invoked via
+//! `pagerank-dynamic bench --exp <id>`.
+
+pub mod experiments;
+pub mod report;
+
+pub use report::{fmt_dur, geomean, Report};

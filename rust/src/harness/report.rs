@@ -1,0 +1,152 @@
+//! Report rendering: aligned console tables (the paper's rows/series) and
+//! JSON result files under `bench_results/`.
+
+use std::path::Path;
+
+use crate::util::json::quote;
+
+/// A rendered experiment: console table + machine-readable rows.
+#[derive(Debug)]
+pub struct Report {
+    pub experiment: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes (substitutions, caveats).
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(experiment: &str, title: &str, columns: &[&str]) -> Self {
+        Self {
+            experiment: experiment.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len());
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Render an aligned console table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} — {} ==\n", self.experiment, self.title));
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect();
+        out.push_str(&header.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(header.join("  ").len()));
+        out.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    /// Serialize to JSON (hand-rolled; offline build has no serde).
+    pub fn to_json(&self) -> String {
+        let arr = |xs: &[String]| {
+            format!("[{}]", xs.iter().map(|x| quote(x)).collect::<Vec<_>>().join(", "))
+        };
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| format!("    {}", arr(r)))
+            .collect::<Vec<_>>()
+            .join(",\n");
+        format!(
+            "{{\n  \"experiment\": {},\n  \"title\": {},\n  \"columns\": {},\n  \"rows\": [\n{}\n  ],\n  \"notes\": {}\n}}\n",
+            quote(&self.experiment),
+            quote(&self.title),
+            arr(&self.columns),
+            rows,
+            arr(&self.notes),
+        )
+    }
+
+    /// Print to stdout and persist JSON under `dir`.
+    pub fn emit(&self, dir: &Path) -> anyhow::Result<()> {
+        println!("{}", self.render());
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.experiment));
+        std::fs::write(&path, self.to_json())?;
+        Ok(())
+    }
+}
+
+/// Format a Duration in human units (µs/ms/s).
+pub fn fmt_dur(d: std::time::Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.0}µs", s * 1e6)
+    }
+}
+
+/// Geometric mean of positive samples.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.max(1e-300).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut r = Report::new("test", "Title", &["graph", "time"]);
+        r.row(vec!["sk-2005".into(), "4.2s".into()]);
+        r.row(vec!["x".into(), "10ms".into()]);
+        let s = r.render();
+        assert!(s.contains("sk-2005"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn fmt_durations() {
+        use std::time::Duration;
+        assert_eq!(fmt_dur(Duration::from_secs(2)), "2.00s");
+        assert_eq!(fmt_dur(Duration::from_millis(5)), "5.00ms");
+        assert_eq!(fmt_dur(Duration::from_micros(7)), "7µs");
+    }
+}

@@ -1,0 +1,33 @@
+//! # pagerank-dynamic
+//!
+//! Reproduction of *"Efficient GPU Implementation of Static and Incrementally
+//! Expanding DF-P PageRank for Dynamic Graphs"* (Sahu, 2024) as a three-layer
+//! Rust + JAX/Pallas stack:
+//!
+//! - **L3 (this crate)**: the dynamic-graph coordinator — graph substrates,
+//!   batch-update pipeline, the five PageRank approaches (Static,
+//!   Naive-dynamic, Dynamic Traversal, Dynamic Frontier, DF with Pruning),
+//!   CPU baselines, and the benchmark harness reproducing every table and
+//!   figure of the paper.
+//! - **L2/L1 (build time, `python/`)**: one PageRank iteration and frontier
+//!   expansion lowered ahead-of-time to HLO artifacts; the Pallas kernels
+//!   implement the paper's thread-per-vertex / block-per-vertex split.
+//! - **runtime**: [`runtime`] loads the artifacts on the PJRT CPU client
+//!   (the "simulated GPU") and [`engines::device`] drives them.
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod batch;
+pub mod coordinator;
+pub mod costmodel;
+pub mod engines;
+pub mod generators;
+pub mod graph;
+pub mod harness;
+pub mod runtime;
+pub mod temporal;
+pub mod util;
+
+pub use engines::config::PagerankConfig;
+pub use graph::csr::CsrGraph;

@@ -1,0 +1,262 @@
+//! `pagerank-dynamic` CLI: run PageRank approaches on synthetic datasets,
+//! replay temporal streams through the coordinator, and regenerate the
+//! paper's tables/figures. (Offline build: hand-rolled arg parsing.)
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use pagerank_dynamic::batch::random_batch;
+use pagerank_dynamic::coordinator::DynamicGraphService;
+use pagerank_dynamic::engines::Approach;
+use pagerank_dynamic::generators::{families, DATASETS};
+use pagerank_dynamic::harness::experiments::{run_experiment, ExpOptions, Runner, Substrate};
+use pagerank_dynamic::runtime::ArtifactStore;
+use pagerank_dynamic::PagerankConfig;
+use pagerank_dynamic::{batch, temporal};
+
+const USAGE: &str = "\
+pagerank-dynamic — Static & DF/DF-P PageRank for dynamic graphs
+  (GPU-via-PJRT reproduction of Sahu 2024)
+
+USAGE:
+  pagerank-dynamic list
+  pagerank-dynamic run   [--dataset NAME] [--approach static|nd|dt|df|dfp]
+                         [--batch-frac F] [--native]
+  pagerank-dynamic serve [--stream NAME|FILE] [--batches N] [--batch-frac F]
+  pagerank-dynamic bench [--exp ID] [--full] [--out-dir DIR]
+                         (IDs: table1 table2 fig1 fig3 fig4 fig6 fig7
+                               fig9..fig13 all)
+";
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected argument {a:?}\n{USAGE}");
+            };
+            // boolean flags
+            if matches!(key, "native" | "full") {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+                continue;
+            }
+            let Some(val) = argv.get(i + 1) else {
+                bail!("flag --{key} needs a value\n{USAGE}");
+            };
+            flags.insert(key.to_string(), val.clone());
+            i += 2;
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn open_store() -> Option<Arc<ArtifactStore>> {
+    match ArtifactStore::open_default() {
+        Ok(s) => Some(Arc::new(s)),
+        Err(e) => {
+            eprintln!("warning: device artifacts unavailable ({e}); native-only mode");
+            None
+        }
+    }
+}
+
+fn cmd_list() -> Result<()> {
+    println!("Table-4 dataset stand-ins:");
+    for d in DATASETS {
+        let g = d.build().to_csr();
+        println!(
+            "  {:18} {:?}  n={:<7} m={}",
+            d.name,
+            d.family,
+            g.num_vertices(),
+            g.num_edges()
+        );
+    }
+    println!("\nTable-3 temporal stand-ins:");
+    for tg in temporal::table3_standins() {
+        println!(
+            "  {:20} n={:<7} |E_T|={}",
+            tg.name,
+            tg.num_vertices,
+            tg.num_temporal_edges()
+        );
+    }
+    if let Some(store) = open_store() {
+        let m = store.manifest();
+        println!(
+            "\nartifact tiers ({} artifacts, kernels={}):",
+            m.artifacts.len(),
+            m.kernel_impl
+        );
+        for t in &m.tiers {
+            println!(
+                "  {:5} V={:<7} ECAP={:<8} W={} C={} NC={} wl={}",
+                t.name, t.v, t.ecap, t.w, t.c, t.nc, t.wl_cap
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let dataset = args.get("dataset", "it-2004");
+    let Some(approach) = Approach::parse(&args.get("approach", "static")) else {
+        bail!("bad --approach (static|nd|dt|df|dfp)");
+    };
+    let batch_frac = args.get_f64("batch-frac", 1e-5)?;
+    let native = args.has("native");
+
+    let Some(d) = families::dataset(&dataset) else {
+        bail!("unknown dataset {dataset} (see `list`)")
+    };
+    let cfg = PagerankConfig::default();
+    let store = if native { None } else { open_store() };
+    let runner = Runner { store, cfg };
+    let substrate = if native || runner.store.is_none() {
+        Substrate::Native
+    } else {
+        Substrate::Device
+    };
+
+    let mut b = d.build();
+    let g0 = b.to_csr();
+    println!(
+        "{dataset}: n={} m={} ({:?})",
+        g0.num_vertices(),
+        g0.num_edges(),
+        substrate
+    );
+    let gt0 = g0.transpose();
+    let prev =
+        pagerank_dynamic::engines::native::static_pagerank(&g0, &gt0, &cfg, None).ranks;
+
+    let bsize = ((g0.num_edges() as f64 * batch_frac).round() as usize).max(1);
+    let upd = random_batch(&b, bsize, 0.8, 42);
+    let old = b.to_csr();
+    batch::apply(&mut b, &upd);
+    let g = b.to_csr();
+    let gt = g.transpose();
+
+    let res = runner.run(approach, substrate, &g, &gt, &old, Some(&prev), &upd)?;
+    println!(
+        "{}: {} iterations in {:?} (initially affected: {})",
+        approach.label(),
+        res.iterations,
+        res.elapsed,
+        res.initially_affected
+    );
+    let reference = pagerank_dynamic::engines::error::reference_ranks(&g, &gt);
+    println!(
+        "L1 error vs reference: {:.3e}",
+        pagerank_dynamic::engines::error::l1_distance(&res.ranks, &reference)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let stream = args.get("stream", "sx-mathoverflow");
+    let num_batches = args.get_usize("batches", 20)?;
+    let batch_frac = args.get_f64("batch-frac", 1e-4)?;
+
+    let tg = if std::path::Path::new(&stream).exists() {
+        temporal::snap::load(std::path::Path::new(&stream))?
+    } else {
+        temporal::table3_standins()
+            .into_iter()
+            .find(|t| t.name == stream)
+            .ok_or_else(|| anyhow::anyhow!("unknown stream {stream}"))?
+    };
+    let bsize = ((tg.num_temporal_edges() as f64 * batch_frac).round() as usize).max(1);
+    let (base, batches) = tg.replay(bsize, num_batches);
+    println!(
+        "serving {}: n={} base edges={} | {} batches of {}",
+        tg.name,
+        base.num_vertices(),
+        base.num_edges(),
+        batches.len(),
+        bsize
+    );
+
+    // the PJRT store is created on the coordinator thread (not Send)
+    let handle = pagerank_dynamic::coordinator::server::spawn(move || {
+        DynamicGraphService::new(base, open_store(), PagerankConfig::default())
+    });
+
+    handle.update(Default::default())?; // initial static ranks
+    for (i, upd) in batches.into_iter().enumerate() {
+        let rep = handle.update(upd)?;
+        println!(
+            "batch {:>3}: {:5} changed via {:6} ({}) — {} iters, {:?}, affected {}",
+            i + 1,
+            rep.edges_changed,
+            rep.approach.label(),
+            if rep.on_device { "device" } else { "native" },
+            rep.iterations,
+            rep.elapsed,
+            rep.initially_affected
+        );
+    }
+    println!("\ntop-10 ranked vertices:");
+    for (v, r) in handle.top_k(10)? {
+        println!("  v{v:<8} {r:.6e}");
+    }
+    println!("\n{}", handle.stats()?);
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "list" => cmd_list(),
+        "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "bench" => {
+            let opts = ExpOptions {
+                quick: !args.has("full"),
+                out_dir: args.get("out-dir", "bench_results").into(),
+            };
+            run_experiment(&args.get("exp", "all"), open_store(), &opts)
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}

@@ -1,0 +1,157 @@
+//! Artifact store: loads HLO-text artifacts, compiles them on the PJRT CPU
+//! client (the "GPU" of this testbed), and caches the executables.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest, TierSpec};
+
+/// Compiled-executable cache over one PJRT client.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<(String, String), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactStore {
+    /// Open the default artifacts directory on a fresh CPU PJRT client.
+    pub fn open_default() -> Result<Self> {
+        Self::open(&Manifest::default_dir())
+    }
+
+    /// Open a specific artifacts directory.
+    pub fn open(dir: &std::path::Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Smallest tier fitting the graph, if any.
+    pub fn tier_for(&self, n: usize, m: usize) -> Option<TierSpec> {
+        self.manifest.smallest_fitting_tier(n, m).cloned()
+    }
+
+    /// Pack a graph into the smallest tier it actually fits, retrying
+    /// larger tiers when the hub-chunk capacity overflows (degenerate
+    /// hub-heavy degree distributions).
+    pub fn pack_graph(
+        &self,
+        g: &crate::graph::CsrGraph,
+        gt: &crate::graph::CsrGraph,
+    ) -> Result<super::DeviceGraph> {
+        let n = g.num_vertices();
+        let m = g.num_edges();
+        let mut tiers: Vec<&TierSpec> =
+            self.manifest.tiers.iter().filter(|t| t.fits(n, m)).collect();
+        tiers.sort_by_key(|t| t.v);
+        let mut last_err = None;
+        for tier in tiers {
+            match super::DeviceGraph::pack(g, gt, tier) {
+                Ok(dg) => return Ok(dg),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err
+            .unwrap_or_else(|| anyhow::anyhow!("graph (n={n}, m={m}) exceeds largest tier")))
+    }
+
+    /// Get (compiling and caching on first use) the executable for
+    /// `name @ tier`.
+    pub fn executable(
+        &self,
+        name: &str,
+        tier: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = (name.to_string(), tier.to_string());
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name, tier)?;
+        let exe = std::sync::Arc::new(self.compile(spec)?);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    fn compile(&self, spec: &ArtifactSpec) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.artifact_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}@{}: {e}", spec.name, spec.tier))
+    }
+
+    /// Eagerly compile every artifact of a tier (used by the server at
+    /// startup so the request path never compiles).
+    pub fn warmup(&self, tier: &str) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.tier == tier)
+            .map(|a| a.name.clone())
+            .collect();
+        for n in &names {
+            self.executable(n, tier)?;
+        }
+        Ok(names.len())
+    }
+}
+
+/// Execute an artifact with host literals and fetch every output literal.
+/// Artifacts are lowered with `return_tuple=False` (single packed output),
+/// but this helper also unpacks tuple roots for robustness. Inputs are
+/// borrowed — `Literal::clone` deep-copies, so hot loops pass references.
+/// (The production engines use `runtime::exec` with device-resident
+/// buffers instead; this path serves tests and one-shot tools.)
+pub fn run(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[&xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe
+        .execute::<&xla::Literal>(inputs)
+        .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+    match lit.shape() {
+        Ok(xla::Shape::Tuple(_)) => lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple result: {e}")),
+        _ => Ok(vec![lit]),
+    }
+}
+
+/// f64 vector literal.
+pub fn lit_f64(x: &[f64]) -> xla::Literal {
+    xla::Literal::vec1(x)
+}
+
+/// i32 vector literal.
+pub fn lit_i32(x: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(x)
+}
+
+/// i32 matrix literal (`rows x cols`, row-major input).
+pub fn lit_i32_2d(x: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(x.len(), rows * cols);
+    xla::Literal::vec1(x)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow::anyhow!("reshape: {e}"))
+}
+
+/// Read an f64 vector back out of a literal.
+pub fn to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+    lit.to_vec::<f64>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+}

@@ -1,0 +1,87 @@
+//! Buffer-resident execution helpers: upload once, chain PJRT buffers
+//! between launches, read back only what the algorithm needs (the L∞
+//! scalar each iteration; the flag segments in worklist mode).
+
+use anyhow::{ensure, Result};
+
+use super::tier::DeviceGraph;
+use super::ArtifactStore;
+
+/// Upload an f64 slice as a device buffer.
+pub fn buf_f64(store: &ArtifactStore, data: &[f64], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    store
+        .client()
+        .buffer_from_host_buffer::<f64>(data, dims, None)
+        .map_err(|e| anyhow::anyhow!("upload f64: {e}"))
+}
+
+/// Upload an i32 slice as a device buffer.
+pub fn buf_i32(store: &ArtifactStore, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    store
+        .client()
+        .buffer_from_host_buffer::<i32>(data, dims, None)
+        .map_err(|e| anyhow::anyhow!("upload i32: {e}"))
+}
+
+/// Execute a single-output artifact on device buffers; returns the output
+/// buffer (stays on device).
+pub fn exec1(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::PjRtBuffer],
+) -> Result<xla::PjRtBuffer> {
+    let mut out = exe
+        .execute_b::<&xla::PjRtBuffer>(args)
+        .map_err(|e| anyhow::anyhow!("execute_b: {e}"))?;
+    ensure!(!out.is_empty() && !out[0].is_empty(), "no outputs");
+    Ok(out.remove(0).remove(0))
+}
+
+/// Download a buffer as f64s.
+pub fn read_f64(buf: &xla::PjRtBuffer) -> Result<Vec<f64>> {
+    let lit = buf
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+    lit.to_vec::<f64>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+}
+
+/// Download a single-element buffer.
+pub fn read_scalar(buf: &xla::PjRtBuffer) -> Result<f64> {
+    let v = read_f64(buf)?;
+    ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    Ok(v[0])
+}
+
+/// All static graph-side buffers for one packed graph, uploaded once per run
+/// (the paper's excluded host→device transfer).
+pub struct GraphBufs {
+    pub odi: xla::PjRtBuffer,
+    pub valid: xla::PjRtBuffer,
+    pub inv_n: xla::PjRtBuffer,
+    pub ell: xla::PjRtBuffer,
+    pub hub_edges: xla::PjRtBuffer,
+    pub hub_seg: xla::PjRtBuffer,
+    pub out_ell: xla::PjRtBuffer,
+    pub out_hub_edges: xla::PjRtBuffer,
+    pub out_hub_seg: xla::PjRtBuffer,
+    pub te_src: xla::PjRtBuffer,
+    pub te_dst: xla::PjRtBuffer,
+}
+
+impl GraphBufs {
+    pub fn build(store: &ArtifactStore, dg: &DeviceGraph) -> Result<Self> {
+        let t = &dg.tier;
+        Ok(Self {
+            odi: buf_f64(store, &dg.outdeg_inv, &[t.v])?,
+            valid: buf_f64(store, &dg.valid, &[t.v])?,
+            inv_n: buf_f64(store, &dg.inv_n, &[1])?,
+            ell: buf_i32(store, &dg.in_side.ell, &[t.v, t.w])?,
+            hub_edges: buf_i32(store, &dg.in_side.hub_edges, &[t.nc, t.c])?,
+            hub_seg: buf_i32(store, &dg.in_side.hub_seg, &[t.nc])?,
+            out_ell: buf_i32(store, &dg.out_side.ell, &[t.v, t.w])?,
+            out_hub_edges: buf_i32(store, &dg.out_side.hub_edges, &[t.nc, t.c])?,
+            out_hub_seg: buf_i32(store, &dg.out_side.hub_seg, &[t.nc])?,
+            te_src: buf_i32(store, &dg.te_src, &[t.ecap])?,
+            te_dst: buf_i32(store, &dg.te_dst, &[t.ecap])?,
+        })
+    }
+}

@@ -1,0 +1,263 @@
+//! `artifacts/manifest.json` — the contract written by `python/compile/aot.py`.
+//!
+//! Parsed with the in-tree minimal JSON parser (`util::json`; offline build).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Baked model constants (must match the engine config at run time).
+#[derive(Debug, Clone)]
+pub struct Constants {
+    pub alpha: f64,
+    pub tau_frontier: f64,
+    pub tau_prune: f64,
+    pub degree_threshold: u32,
+    pub ell_width: usize,
+    pub chunk_width: usize,
+}
+
+/// Fixed-shape size class (mirror of `python/compile/formats.py::Tier`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TierSpec {
+    pub name: String,
+    pub v: usize,
+    pub ecap: usize,
+    pub w: usize,
+    pub c: usize,
+    pub nc: usize,
+    pub wl_cap: usize,
+    pub wl_chunk_cap: usize,
+}
+
+impl TierSpec {
+    /// Can a graph with `n` vertices and `m` edges be packed into this tier?
+    pub fn fits(&self, n: usize, m: usize) -> bool {
+        n <= self.v - 1 && m <= self.ecap
+    }
+
+    /// Sentinel vertex id (last slot).
+    pub fn sentinel(&self) -> i32 {
+        (self.v - 1) as i32
+    }
+}
+
+/// One input of an artifact.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-lowered HLO program.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub tier: String,
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format_version: u32,
+    pub kernel_impl: String,
+    pub constants: Constants,
+    pub tiers: Vec<TierSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn parse_tier(v: &Value) -> Result<TierSpec> {
+    Ok(TierSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        v: v.get("v")?.as_usize()?,
+        ecap: v.get("ecap")?.as_usize()?,
+        w: v.get("w")?.as_usize()?,
+        c: v.get("c")?.as_usize()?,
+        nc: v.get("nc")?.as_usize()?,
+        wl_cap: v.get("wl_cap")?.as_usize()?,
+        wl_chunk_cap: v.get("wl_chunk_cap")?.as_usize()?,
+    })
+}
+
+fn parse_artifact(v: &Value) -> Result<ArtifactSpec> {
+    let inputs = v
+        .get("inputs")?
+        .as_arr()?
+        .iter()
+        .map(|i| {
+            Ok(InputSpec {
+                name: i.get("name")?.as_str()?.to_string(),
+                shape: i
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_usize())
+                    .collect::<Result<_>>()?,
+                dtype: i.get("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect::<Result<_>>()?;
+    let outputs = v
+        .get("outputs")?
+        .as_arr()?
+        .iter()
+        .map(|x| Ok(x.as_str()?.to_string()))
+        .collect::<Result<_>>()?;
+    Ok(ArtifactSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        tier: v.get("tier")?.as_str()?.to_string(),
+        file: v.get("file")?.as_str()?.to_string(),
+        sha256: v.get("sha256")?.as_str()?.to_string(),
+        inputs,
+        outputs,
+    })
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let data = std::fs::read_to_string(&path).with_context(|| {
+            format!("read {} (run `make artifacts` first)", path.display())
+        })?;
+        let v = json::parse(&data).context("parse manifest.json")?;
+        let format_version = v.get("format_version")?.as_usize()? as u32;
+        if format_version != 1 {
+            bail!("unsupported manifest format_version {format_version}");
+        }
+        let c = v.get("constants")?;
+        let constants = Constants {
+            alpha: c.get("alpha")?.as_f64()?,
+            tau_frontier: c.get("tau_frontier")?.as_f64()?,
+            tau_prune: c.get("tau_prune")?.as_f64()?,
+            degree_threshold: c.get("degree_threshold")?.as_usize()? as u32,
+            ell_width: c.get("ell_width")?.as_usize()?,
+            chunk_width: c.get("chunk_width")?.as_usize()?,
+        };
+        let tiers = v
+            .get("tiers")?
+            .as_arr()?
+            .iter()
+            .map(parse_tier)
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = v
+            .get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(parse_artifact)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            format_version,
+            kernel_impl: v.get("kernel_impl")?.as_str()?.to_string(),
+            constants,
+            tiers,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Default artifacts directory: `$PAGERANK_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("PAGERANK_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn tier(&self, name: &str) -> Option<&TierSpec> {
+        self.tiers.iter().find(|t| t.name == name)
+    }
+
+    /// Smallest tier fitting (n, m), if any.
+    pub fn smallest_fitting_tier(&self, n: usize, m: usize) -> Option<&TierSpec> {
+        self.tiers.iter().filter(|t| t.fits(n, m)).min_by_key(|t| t.v)
+    }
+
+    pub fn artifact(&self, name: &str, tier: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name && a.tier == tier)
+            .with_context(|| format!("artifact {name}@{tier} not in manifest"))
+    }
+
+    pub fn artifact_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Index of artifacts by (name, tier).
+    pub fn by_key(&self) -> HashMap<(String, String), &ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .map(|a| ((a.name.clone(), a.tier.clone()), a))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        let here = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        here.join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir()).expect("make artifacts first");
+        assert_eq!(m.constants.alpha, 0.85);
+        assert_eq!(m.constants.ell_width, 16);
+        assert!(m.tier("t10").is_some());
+        assert!(m.artifact("step_plain", "t10").is_ok());
+        assert!(m.artifact("nonexistent", "t10").is_err());
+        assert_eq!(m.kernel_impl, "fused");
+    }
+
+    #[test]
+    fn tier_fit_logic() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let t10 = m.tier("t10").unwrap();
+        assert!(t10.fits(1023, 1 << 14));
+        assert!(!t10.fits(1024, 10)); // sentinel slot reserved
+        assert_eq!(m.smallest_fitting_tier(500, 100).unwrap().name, "t10");
+        assert_eq!(m.smallest_fitting_tier(5000, 100).unwrap().name, "t13");
+        assert!(m.smallest_fitting_tier(1 << 22, 10).is_none());
+    }
+
+    #[test]
+    fn artifact_files_exist() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(!m.artifacts.is_empty());
+        for a in &m.artifacts {
+            let p = m.artifact_path(a);
+            assert!(p.exists(), "{} missing", p.display());
+            assert_eq!(a.sha256.len(), 64);
+        }
+    }
+
+    #[test]
+    fn input_shapes_match_tier() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let t = m.tier("t10").unwrap();
+        let a = m.artifact("step_plain", "t10").unwrap();
+        let by_name: HashMap<&str, &InputSpec> =
+            a.inputs.iter().map(|i| (i.name.as_str(), i)).collect();
+        // packed state1 layout: [r | linf]
+        assert_eq!(by_name["state"].shape, vec![t.v + 1]);
+        assert_eq!(by_name["ell_idx"].shape, vec![t.v, t.w]);
+        assert_eq!(by_name["hub_edges"].shape, vec![t.nc, t.c]);
+        assert_eq!(by_name["state"].dtype, "float64");
+        assert_eq!(by_name["ell_idx"].dtype, "int32");
+        // df steps carry the 3-segment state
+        let a3 = m.artifact("step_dfp", "t10").unwrap();
+        assert_eq!(a3.inputs[0].shape, vec![3 * t.v + 1]);
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: manifest parsing, device-graph packing, and the compiled
+//! artifact store. This is the only module that touches the `xla` crate;
+//! everything above it works with plain Rust types.
+
+pub mod artifacts;
+pub mod exec;
+pub mod manifest;
+pub mod tier;
+
+pub use artifacts::ArtifactStore;
+pub use manifest::{Manifest, TierSpec};
+pub use tier::DeviceGraph;

@@ -1,0 +1,279 @@
+//! Device graph packing — the Rust mirror of `python/compile/formats.py`.
+//!
+//! Packs a CSR snapshot into the fixed-shape, sentinel-padded arrays the AOT
+//! artifacts consume: the in-/out-side ELL matrices ("thread-per-vertex"
+//! partition), hub chunk matrices ("block-per-vertex" partition), the flat
+//! edge list (ablation + flat expansion), the inverse out-degree /
+//! validity / 1/n vectors, and the vertex→chunk-row maps used to build
+//! worklists for the compacted step variants.
+//!
+//! The packing *is* the paper's Algorithm 4 partitioning step (vertices are
+//! routed to the ELL or hub structure by comparing their degree against the
+//! manifest's `degree_threshold`), so its runtime is reported as the
+//! partitioning component of the measured time.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::graph::CsrGraph;
+
+use super::manifest::TierSpec;
+
+/// One direction (in or out) packed as ELL rows + hub chunks.
+#[derive(Debug, Clone)]
+pub struct PackedSide {
+    /// `[V * W]` row-major ELL neighbor ids; hub rows all-sentinel.
+    pub ell: Vec<i32>,
+    /// `[NC * C]` row-major hub chunk neighbor ids.
+    pub hub_edges: Vec<i32>,
+    /// `[NC]` destination (in-side) / source (out-side) vertex per chunk row.
+    pub hub_seg: Vec<i32>,
+    /// Per vertex: (first chunk row, number of chunk rows); (0, 0) for
+    /// non-hub vertices. Used for worklist construction.
+    pub chunk_rows: Vec<(u32, u32)>,
+    /// Number of hub vertices (degree > threshold).
+    pub n_hubs: usize,
+    /// Number of chunk rows in use.
+    pub n_chunk_rows: usize,
+}
+
+/// A graph fully packed for one tier.
+#[derive(Debug, Clone)]
+pub struct DeviceGraph {
+    pub tier: TierSpec,
+    pub n: usize,
+    pub m: usize,
+    /// in-side (pull): partitioned by in-degree — feeds rank computation.
+    pub in_side: PackedSide,
+    /// out-side (push): partitioned by out-degree — feeds scatter expansion.
+    pub out_side: PackedSide,
+    /// flat edge list (u → v), sentinel padded to ECAP.
+    pub te_src: Vec<i32>,
+    pub te_dst: Vec<i32>,
+    /// `1/outdeg(v)` for real vertices, 0 beyond (and for the sentinel).
+    pub outdeg_inv: Vec<f64>,
+    /// 1.0 for real vertices.
+    pub valid: Vec<f64>,
+    /// `[1/n]`.
+    pub inv_n: Vec<f64>,
+    /// Packing (= partitioning) time, reported per the paper's measurement
+    /// protocol (Section 5.1.5 includes partitioning in the runtime).
+    pub pack_time: Duration,
+}
+
+fn pack_side(adj: &CsrGraph, tier: &TierSpec) -> Result<PackedSide> {
+    let sentinel = tier.sentinel();
+    let n = adj.num_vertices();
+    let mut ell = vec![sentinel; tier.v * tier.w];
+    let mut hub_edges = vec![sentinel; tier.nc * tier.c];
+    let mut hub_seg = vec![sentinel; tier.nc];
+    let mut chunk_rows = vec![(0u32, 0u32); tier.v];
+    let mut row = 0usize;
+    let mut n_hubs = 0usize;
+
+    for v in 0..n as u32 {
+        let nbrs = adj.neighbors(v);
+        if nbrs.len() <= tier.w {
+            let base = v as usize * tier.w;
+            for (i, &u) in nbrs.iter().enumerate() {
+                ell[base + i] = u as i32;
+            }
+        } else {
+            n_hubs += 1;
+            let first = row;
+            for chunk in nbrs.chunks(tier.c) {
+                // row NC-1 is reserved as the worklist sentinel target
+                if row >= tier.nc - 1 {
+                    bail!("hub chunk overflow in tier {}", tier.name);
+                }
+                let base = row * tier.c;
+                for (i, &u) in chunk.iter().enumerate() {
+                    hub_edges[base + i] = u as i32;
+                }
+                hub_seg[row] = v as i32;
+                row += 1;
+            }
+            chunk_rows[v as usize] = (first as u32, (row - first) as u32);
+        }
+    }
+    Ok(PackedSide { ell, hub_edges, hub_seg, chunk_rows, n_hubs, n_chunk_rows: row })
+}
+
+impl DeviceGraph {
+    /// Pack `g` (out-adjacency CSR; self-loops required) and its transpose
+    /// `gt` into `tier`-shaped arrays.
+    pub fn pack(g: &CsrGraph, gt: &CsrGraph, tier: &TierSpec) -> Result<Self> {
+        let start = Instant::now();
+        let n = g.num_vertices();
+        let m = g.num_edges();
+        if !tier.fits(n, m) {
+            bail!("graph (n={n}, m={m}) does not fit tier {}", tier.name);
+        }
+        if !g.has_no_dead_ends() {
+            bail!("graph has dead ends: add self-loops before packing");
+        }
+
+        let in_side = pack_side(gt, tier)?;
+        let out_side = pack_side(g, tier)?;
+
+        let sentinel = tier.sentinel();
+        let mut te_src = vec![sentinel; tier.ecap];
+        let mut te_dst = vec![sentinel; tier.ecap];
+        for (i, (u, v)) in g.edges().enumerate() {
+            te_src[i] = u as i32;
+            te_dst[i] = v as i32;
+        }
+
+        let mut outdeg_inv = vec![0.0f64; tier.v];
+        let mut valid = vec![0.0f64; tier.v];
+        for v in 0..n as u32 {
+            outdeg_inv[v as usize] = 1.0 / g.degree(v) as f64;
+            valid[v as usize] = 1.0;
+        }
+
+        Ok(Self {
+            tier: tier.clone(),
+            n,
+            m,
+            in_side,
+            out_side,
+            te_src,
+            te_dst,
+            outdeg_inv,
+            valid,
+            inv_n: vec![1.0 / n as f64],
+            pack_time: start.elapsed(),
+        })
+    }
+
+    /// Pad a per-vertex vector to tier shape.
+    pub fn pad(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut out = vec![0.0f64; self.tier.v];
+        out[..self.n].copy_from_slice(x);
+        out
+    }
+
+    /// Build the worklist pair for a compacted step from affected flags
+    /// (tier-shaped f64 0/1). Returns `None` when the frontier exceeds the
+    /// worklist capacity (caller falls back to the full-shape step).
+    ///
+    /// `side` selects which chunk-row map to use: the in-side for rank
+    /// steps, the out-side for scatter expansion.
+    pub fn worklists(&self, flags: &[f64], side: &PackedSide) -> Option<(Vec<i32>, Vec<i32>)> {
+        let sentinel = self.tier.sentinel();
+        let mut wl = Vec::with_capacity(self.tier.wl_cap);
+        let mut wlc = Vec::with_capacity(self.tier.wl_chunk_cap);
+        for v in 0..self.n {
+            if flags[v] > 0.0 {
+                if wl.len() == self.tier.wl_cap {
+                    return None;
+                }
+                wl.push(v as i32);
+                let (first, len) = side.chunk_rows[v];
+                if len > 0 {
+                    if wlc.len() + len as usize > self.tier.wl_chunk_cap {
+                        return None;
+                    }
+                    wlc.extend((first..first + len).map(|r| r as i32));
+                }
+            }
+        }
+        wl.resize(self.tier.wl_cap, sentinel);
+        wlc.resize(self.tier.wl_chunk_cap, (self.tier.nc - 1) as i32);
+        Some((wl, wlc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators::er;
+    use crate::runtime::manifest::Manifest;
+
+    fn t10() -> TierSpec {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).unwrap().tier("t10").unwrap().clone()
+    }
+
+    #[test]
+    fn pack_roundtrip_in_side() {
+        let g = er::generate(200, 5.0, 1).to_csr();
+        let gt = g.transpose();
+        let tier = t10();
+        let dg = DeviceGraph::pack(&g, &gt, &tier).unwrap();
+        let sentinel = tier.sentinel();
+
+        // reconstruct in-neighbors from ELL + hub chunks
+        let mut got: Vec<Vec<i32>> = vec![vec![]; 200];
+        for v in 0..200usize {
+            for i in 0..tier.w {
+                let u = dg.in_side.ell[v * tier.w + i];
+                if u != sentinel {
+                    got[v].push(u);
+                }
+            }
+        }
+        for row in 0..tier.nc {
+            let v = dg.in_side.hub_seg[row];
+            if v == sentinel {
+                continue;
+            }
+            for i in 0..tier.c {
+                let u = dg.in_side.hub_edges[row * tier.c + i];
+                if u != sentinel {
+                    got[v as usize].push(u);
+                }
+            }
+        }
+        for v in 0..200u32 {
+            let mut want: Vec<i32> = gt.neighbors(v).iter().map(|&u| u as i32).collect();
+            want.sort_unstable();
+            got[v as usize].sort_unstable();
+            assert_eq!(got[v as usize], want, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn worklist_covers_flags_and_chunks() {
+        let g = er::generate(300, 8.0, 2).to_csr();
+        let gt = g.transpose();
+        let tier = t10();
+        let dg = DeviceGraph::pack(&g, &gt, &tier).unwrap();
+        let mut flags = vec![0.0; tier.v];
+        for v in (0..300).step_by(11) {
+            flags[v] = 1.0;
+        }
+        let (wl, wlc) = dg.worklists(&flags, &dg.in_side).unwrap();
+        assert_eq!(wl.len(), tier.wl_cap);
+        assert_eq!(wlc.len(), tier.wl_chunk_cap);
+        let set: std::collections::HashSet<i32> = wl.iter().copied().collect();
+        for v in 0..300 {
+            if flags[v] > 0.0 {
+                assert!(set.contains(&(v as i32)));
+                let (first, len) = dg.in_side.chunk_rows[v];
+                for r in first..first + len {
+                    assert!(wlc.contains(&(r as i32)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worklist_overflow_returns_none() {
+        let g = er::generate(900, 4.0, 3).to_csr();
+        let gt = g.transpose();
+        let tier = t10(); // wl_cap = 64
+        let dg = DeviceGraph::pack(&g, &gt, &tier).unwrap();
+        let flags = vec![1.0; tier.v];
+        assert!(dg.worklists(&flags, &dg.in_side).is_none());
+    }
+
+    #[test]
+    fn pack_rejects_too_big() {
+        let g = er::generate(2000, 4.0, 4).to_csr();
+        let gt = g.transpose();
+        assert!(DeviceGraph::pack(&g, &gt, &t10()).is_err());
+    }
+}

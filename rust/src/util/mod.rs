@@ -1,0 +1,7 @@
+//! Self-contained substrates for the offline build: deterministic RNG and
+//! minimal JSON (replacing the `rand` / `serde_json` crates).
+
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,78 @@
+//! Cross-layer golden test: the Python oracle (`python/compile/kernels/
+//! ref.py::naive_pagerank`) produced these ranks for a fixed 8-vertex
+//! graph; every Rust engine (native sync/async, device via artifacts) must
+//! reproduce them. This pins the L1↔L2↔L3 numerical contract across
+//! languages — if either side's formula drifts, this fails.
+
+use std::path::PathBuf;
+
+use pagerank_dynamic::engines::native::{self, asynchronous};
+use pagerank_dynamic::engines::device::DeviceEngine;
+use pagerank_dynamic::graph::CsrGraph;
+use pagerank_dynamic::runtime::ArtifactStore;
+use pagerank_dynamic::PagerankConfig;
+
+/// Graph (self-loops included): v -> [neighbors]; mirrored in the python
+/// snippet in this file's history / EXPERIMENTS.md.
+fn golden_graph() -> CsrGraph {
+    CsrGraph::from_adjacency(&[
+        vec![0, 1, 2],
+        vec![1, 3],
+        vec![2, 3, 0],
+        vec![3, 4],
+        vec![4, 0, 5],
+        vec![5, 6],
+        vec![6, 7, 0],
+        vec![7, 2],
+    ])
+}
+
+/// Output of `ref.naive_pagerank` (alpha=0.85, tau=1e-10, L-inf), 41 iters.
+const GOLDEN: [f64; 8] = [
+    1.676353592250898e-1,
+    1.152116262848269e-1,
+    1.366786376910401e-1,
+    1.851140089784086e-1,
+    1.359397029428229e-1,
+    9.959347678558501e-2,
+    8.522403858254061e-2,
+    7.460314950968594e-2,
+];
+const GOLDEN_ITERS: usize = 41;
+
+#[test]
+fn native_sync_matches_python_oracle() {
+    let g = golden_graph();
+    let gt = g.transpose();
+    let res = native::static_pagerank(&g, &gt, &PagerankConfig::default(), None);
+    assert_eq!(res.iterations, GOLDEN_ITERS);
+    for (got, want) in res.ranks.iter().zip(GOLDEN) {
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+}
+
+#[test]
+fn native_async_matches_python_oracle() {
+    let g = golden_graph();
+    let gt = g.transpose();
+    let res = asynchronous::static_async(&g, &gt, &PagerankConfig::default(), None);
+    for (got, want) in res.ranks.iter().zip(GOLDEN) {
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+}
+
+#[test]
+fn device_matches_python_oracle() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let store = ArtifactStore::open(&dir).expect("make artifacts first");
+    let g = golden_graph();
+    let gt = g.transpose();
+    let dg = store.pack_graph(&g, &gt).unwrap();
+    let res = DeviceEngine::new(&store)
+        .static_pagerank(&dg, &PagerankConfig::default(), None)
+        .unwrap();
+    assert_eq!(res.iterations, GOLDEN_ITERS);
+    for (got, want) in res.ranks.iter().zip(GOLDEN) {
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+}

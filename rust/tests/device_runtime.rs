@@ -1,0 +1,196 @@
+//! Integration: AOT artifacts → PJRT → device engines vs native engines.
+//!
+//! These tests require `make artifacts` to have run (the repo's Makefile
+//! test target guarantees it).
+
+use std::path::PathBuf;
+
+use pagerank_dynamic::batch::{self, BatchUpdate};
+use pagerank_dynamic::engines::device::{DeviceEngine, PartitionMode};
+use pagerank_dynamic::engines::error::l1_distance;
+use pagerank_dynamic::engines::{native, Approach};
+use pagerank_dynamic::generators::{er, rmat};
+use pagerank_dynamic::runtime::{ArtifactStore, DeviceGraph};
+use pagerank_dynamic::PagerankConfig;
+
+fn store() -> ArtifactStore {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    ArtifactStore::open(&dir).expect("run `make artifacts` first")
+}
+
+fn pack(
+    b: &pagerank_dynamic::graph::GraphBuilder,
+    store: &ArtifactStore,
+) -> (pagerank_dynamic::CsrGraph, pagerank_dynamic::CsrGraph, DeviceGraph) {
+    let g = b.to_csr();
+    let gt = g.transpose();
+    let tier = store.tier_for(g.num_vertices(), g.num_edges()).unwrap();
+    let dg = DeviceGraph::pack(&g, &gt, &tier).unwrap();
+    (g, gt, dg)
+}
+
+#[test]
+fn device_static_matches_native() {
+    let store = store();
+    let eng = DeviceEngine::new(&store);
+    let cfg = PagerankConfig::default();
+    for b in [
+        er::generate(300, 5.0, 1),
+        rmat::generate(9, 8.0, rmat::RmatParams::WEB, 2), // exercises hubs
+    ] {
+        let (g, gt, dg) = pack(&b, &store);
+        let dev = eng.static_pagerank(&dg, &cfg, None).unwrap();
+        let nat = native::static_pagerank(&g, &gt, &cfg, None);
+        assert_eq!(dev.iterations, nat.iterations);
+        assert!(
+            l1_distance(&dev.ranks, &nat.ranks) < 1e-9,
+            "device vs native static"
+        );
+        assert!((dev.ranks.iter().sum::<f64>() - 1.0).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn device_dynamic_approaches_match_native() {
+    let store = store();
+    let eng = DeviceEngine::new(&store);
+    let cfg = PagerankConfig::default();
+
+    let mut b = rmat::generate(9, 6.0, rmat::RmatParams::SOCIAL, 7);
+    let old_g = b.to_csr();
+    let old_gt = old_g.transpose();
+    let prev = native::static_pagerank(&old_g, &old_gt, &cfg, None).ranks;
+
+    let upd = batch::random_batch(&b, 12, 0.8, 5);
+    batch::apply(&mut b, &upd);
+    let (g, gt, dg) = pack(&b, &store);
+
+    // ND
+    let dev = eng.naive_dynamic(&dg, &cfg, &prev).unwrap();
+    let nat = native::naive_dynamic(&g, &gt, &cfg, &prev);
+    assert!(l1_distance(&dev.ranks, &nat.ranks) < 1e-9, "ND");
+    assert_eq!(dev.iterations, nat.iterations, "ND iterations");
+
+    // DT
+    let dev = eng.dynamic_traversal(&dg, &g, &old_g, &cfg, &prev, &upd).unwrap();
+    let nat = native::dynamic::dynamic_traversal(&g, &gt, &old_g, &cfg, &prev, &upd);
+    assert!(l1_distance(&dev.ranks, &nat.ranks) < 1e-9, "DT");
+    assert_eq!(dev.initially_affected, nat.initially_affected);
+
+    // DF / DF-P across every partition mode and worklist setting
+    for prune in [false, true] {
+        let nat = native::dynamic::dynamic_frontier(&g, &gt, &cfg, &prev, &upd, prune);
+        for mode in [
+            PartitionMode::DontPartition,
+            PartitionMode::PartitionGPrime,
+            PartitionMode::PartitionBoth,
+            PartitionMode::PartitionBothPull,
+        ] {
+            for wl in [false, true] {
+                let dev = eng
+                    .dynamic_frontier(&dg, &g, &cfg, &prev, &upd, prune, mode, wl)
+                    .unwrap();
+                assert!(
+                    l1_distance(&dev.ranks, &nat.ranks) < 1e-9,
+                    "prune={prune} mode={mode:?} wl={wl}"
+                );
+                assert_eq!(
+                    dev.iterations, nat.iterations,
+                    "prune={prune} mode={mode:?} wl={wl}"
+                );
+                assert_eq!(dev.initially_affected, nat.initially_affected);
+            }
+        }
+    }
+}
+
+#[test]
+fn device_empty_batch_noop() {
+    let store = store();
+    let eng = DeviceEngine::new(&store);
+    let cfg = PagerankConfig::default();
+    let b = er::generate(200, 4.0, 3);
+    let (g, gt, dg) = pack(&b, &store);
+    let prev = native::static_pagerank(&g, &gt, &cfg, None).ranks;
+    let res = eng
+        .dynamic_frontier(
+            &dg,
+            &g,
+            &cfg,
+            &prev,
+            &BatchUpdate::default(),
+            true,
+            PartitionMode::PartitionBothPull,
+            true,
+        )
+        .unwrap();
+    assert_eq!(res.initially_affected, 0);
+    assert!(l1_distance(&res.ranks, &prev) < 1e-12);
+}
+
+#[test]
+fn run_approach_dispatch() {
+    let store = store();
+    let eng = DeviceEngine::new(&store);
+    let cfg = PagerankConfig::default();
+    let mut b = er::generate(400, 5.0, 9);
+    let old_g = b.to_csr();
+    let old_gt = old_g.transpose();
+    let prev = native::static_pagerank(&old_g, &old_gt, &cfg, None).ranks;
+    let upd = batch::random_batch(&b, 6, 0.8, 11);
+    batch::apply(&mut b, &upd);
+    let (g, gt, dg) = pack(&b, &store);
+    let reference = native::static_pagerank(&g, &gt, &PagerankConfig::reference(), None).ranks;
+
+    for a in Approach::ALL {
+        let res = eng
+            .run_approach(a, &dg, &g, &old_g, &cfg, Some(&prev), &upd)
+            .unwrap();
+        let err = l1_distance(&res.ranks, &reference);
+        assert!(err < 1e-3, "{a:?} err={err}");
+    }
+}
+
+#[test]
+fn kernel_artifacts_execute() {
+    // standalone Pallas kernel artifacts: ell gather-sum + linf
+    use pagerank_dynamic::runtime::artifacts::{lit_f64, lit_i32_2d, run, to_f64};
+    let store = store();
+    let tier = store.manifest().tier("t10").unwrap().clone();
+    let exe = store.executable("kernel_ell_sum", "t10").unwrap();
+
+    let mut contrib = vec![0.0f64; tier.v];
+    for (i, c) in contrib.iter_mut().enumerate() {
+        *c = (i % 13) as f64 * 0.25;
+    }
+    contrib[tier.v - 1] = 0.0; // sentinel
+    let mut idx = vec![(tier.v - 1) as i32; tier.v * tier.w];
+    // row 5 gathers slots 1, 2, 3
+    for (k, slot) in [1, 2, 3].into_iter().enumerate() {
+        idx[5 * tier.w + k] = slot;
+    }
+    let outs = run(
+        &exe,
+        &[&lit_f64(&contrib), &lit_i32_2d(&idx, tier.v, tier.w).unwrap()],
+    )
+    .unwrap();
+    let sums = to_f64(&outs[0]).unwrap();
+    assert_eq!(sums.len(), tier.v);
+    assert!((sums[5] - (contrib[1] + contrib[2] + contrib[3])).abs() < 1e-12);
+    assert_eq!(sums[0], 0.0);
+
+    let exe = store.executable("kernel_linf", "t10").unwrap();
+    let a = vec![0.5f64; tier.v];
+    let mut b = vec![0.5f64; tier.v];
+    b[77] = 0.125;
+    let outs = run(&exe, &[&lit_f64(&a), &lit_f64(&b)]).unwrap();
+    let linf = to_f64(&outs[0]).unwrap();
+    assert_eq!(linf, vec![0.375]);
+}
+
+#[test]
+fn warmup_compiles_tier() {
+    let store = store();
+    let n = store.warmup("t10").unwrap();
+    assert!(n >= 14, "expected all t10 artifacts, got {n}");
+}

@@ -1,0 +1,229 @@
+//! Property-based tests over the engine and substrate invariants
+//! (hand-rolled generator loops — offline build, no proptest; each property
+//! is checked across many seeded random instances and graph families).
+
+use pagerank_dynamic::batch::{self, BatchUpdate};
+use pagerank_dynamic::engines::error::{l1_distance, linf_distance};
+use pagerank_dynamic::engines::native::affected::{
+    dt_affected, expand_affected, initial_affected,
+};
+use pagerank_dynamic::engines::native;
+use pagerank_dynamic::generators::{chain, er, grid, rmat};
+use pagerank_dynamic::graph::{partition_by_degree, GraphBuilder};
+use pagerank_dynamic::util::Rng;
+use pagerank_dynamic::PagerankConfig;
+
+fn random_builder(seed: u64) -> GraphBuilder {
+    let mut rng = Rng::seed_from_u64(seed);
+    match seed % 4 {
+        0 => er::generate(50 + rng.gen_range(400), 2.0 + rng.gen_f64() * 6.0, seed),
+        1 => rmat::generate(
+            7 + (seed % 3) as u32,
+            3.0 + rng.gen_f64() * 8.0,
+            rmat::RmatParams::WEB,
+            seed,
+        ),
+        2 => grid::generate(8 + rng.gen_range(20), 8 + rng.gen_range(20), seed),
+        _ => chain::generate(100 + rng.gen_range(900), 20 + rng.gen_range(80), seed),
+    }
+}
+
+/// Ranks are a probability distribution and respect τ against a
+/// tighter-converged run.
+#[test]
+fn prop_static_ranks_are_distribution() {
+    let cfg = PagerankConfig::default();
+    for seed in 0..12u64 {
+        let g = random_builder(seed).to_csr();
+        let gt = g.transpose();
+        let res = native::static_pagerank(&g, &gt, &cfg, None);
+        let sum: f64 = res.ranks.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "seed {seed}: sum {sum}");
+        assert!(res.ranks.iter().all(|&r| r > 0.0), "seed {seed}: positivity");
+        let tight = native::static_pagerank(
+            &g,
+            &gt,
+            &PagerankConfig { tau: 1e-13, ..cfg },
+            None,
+        );
+        assert!(linf_distance(&res.ranks, &tight.ranks) < 1e-8, "seed {seed}");
+    }
+}
+
+/// partition(degrees) is a permutation split exactly at the threshold.
+#[test]
+fn prop_partition_is_threshold_permutation() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let n = 1 + rng.gen_range(3000);
+        let threshold = rng.gen_range(40) as u32;
+        let degrees: Vec<u32> = (0..n).map(|_| rng.gen_range(60) as u32).collect();
+        let p = partition_by_degree(&degrees, threshold);
+        assert_eq!(p.ids.len(), n);
+        let mut seen = vec![false; n];
+        for (i, &v) in p.ids.iter().enumerate() {
+            assert!(!seen[v as usize], "duplicate {v}");
+            seen[v as usize] = true;
+            let low = degrees[v as usize] <= threshold;
+            assert_eq!(low, i < p.n_low, "vertex {v} on wrong side");
+        }
+    }
+}
+
+/// DF initial affected set == brute-force recomputation of Algorithm 5.
+#[test]
+fn prop_initial_affected_matches_bruteforce() {
+    for seed in 0..15u64 {
+        let mut b = random_builder(seed);
+        let upd = batch::random_batch(&b, 1 + (seed as usize % 20), 0.7, seed + 99);
+        batch::apply(&mut b, &upd);
+        let g = b.to_csr();
+        let n = g.num_vertices();
+
+        let (mut dv, dn) = initial_affected(n, &upd);
+        expand_affected(&mut dv, &dn, &g);
+
+        let mut want = vec![0u8; n];
+        for &(u, v) in &upd.deletions {
+            want[v as usize] = 1;
+            for &w in g.neighbors(u) {
+                want[w as usize] = 1;
+            }
+        }
+        for &(u, _) in &upd.insertions {
+            for &w in g.neighbors(u) {
+                want[w as usize] = 1;
+            }
+        }
+        assert_eq!(dv, want, "seed {seed}");
+    }
+}
+
+/// DT's affected set contains every vertex whose rank meaningfully changes
+/// (the correctness argument behind Dynamic Traversal).
+#[test]
+fn prop_dt_affected_covers_rank_changes() {
+    let cfg = PagerankConfig::default();
+    for seed in 20..28u64 {
+        let mut b = random_builder(seed);
+        let old_g = b.to_csr();
+        let old_gt = old_g.transpose();
+        let before = native::static_pagerank(&old_g, &old_gt, &cfg, None).ranks;
+        let upd = batch::random_batch(&b, 4, 0.8, seed * 3 + 1);
+        batch::apply(&mut b, &upd);
+        let g = b.to_csr();
+        let gt = g.transpose();
+        let after = native::static_pagerank(&g, &gt, &cfg, None).ranks;
+        let aff = dt_affected(&g, &old_g, &upd);
+        for v in 0..g.num_vertices() {
+            let delta = (after[v] - before[v]).abs() / after[v].max(before[v]);
+            if delta > 1e-4 && aff[v] == 0 {
+                let is_del_target =
+                    upd.deletions.iter().any(|&(_, t)| t as usize == v);
+                assert!(
+                    is_del_target,
+                    "seed {seed}: vertex {v} changed {delta:.2e} but unmarked"
+                );
+            }
+        }
+    }
+}
+
+/// DF/DF-P converge to the true (from-scratch) ranks within the paper's
+/// acceptability band across graph families.
+#[test]
+fn prop_frontier_error_bounded() {
+    let cfg = PagerankConfig::default();
+    for seed in 40..52u64 {
+        let mut b = random_builder(seed);
+        let g0 = b.to_csr();
+        let gt0 = g0.transpose();
+        let prev = native::static_pagerank(&g0, &gt0, &cfg, None).ranks;
+        let upd = batch::random_batch(&b, 1 + (seed as usize % 10), 0.8, seed);
+        batch::apply(&mut b, &upd);
+        let g = b.to_csr();
+        let gt = g.transpose();
+        let truth =
+            native::static_pagerank(&g, &gt, &PagerankConfig::reference(), None).ranks;
+        for prune in [false, true] {
+            let res =
+                native::dynamic::dynamic_frontier(&g, &gt, &cfg, &prev, &upd, prune);
+            let err = l1_distance(&res.ranks, &truth);
+            assert!(err < 1e-2, "seed {seed} prune={prune}: err {err}");
+        }
+    }
+}
+
+/// Applying a batch then its inverse restores the original edge multiset.
+#[test]
+fn prop_batch_apply_revert() {
+    for seed in 60..75u64 {
+        let mut b = random_builder(seed);
+        b.ensure_self_loops();
+        let mut edges_before: Vec<_> = b.real_edges();
+        edges_before.sort_unstable();
+        let upd = batch::random_batch(&b, 10, 0.5, seed);
+        batch::apply(&mut b, &upd);
+        let inv = BatchUpdate {
+            deletions: upd.insertions.clone(),
+            insertions: upd.deletions.clone(),
+        };
+        batch::apply(&mut b, &inv);
+        let mut edges_after: Vec<_> = b.real_edges();
+        edges_after.sort_unstable();
+        assert_eq!(edges_before, edges_after, "seed {seed}");
+    }
+}
+
+/// CSR transpose is an involution on the edge multiset.
+#[test]
+fn prop_transpose_involution() {
+    for seed in 80..95u64 {
+        let g = random_builder(seed).to_csr();
+        let gtt = g.transpose().transpose();
+        assert_eq!(g.num_edges(), gtt.num_edges());
+        for v in 0..g.num_vertices() as u32 {
+            let mut a = g.neighbors(v).to_vec();
+            let mut b = gtt.neighbors(v).to_vec();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "seed {seed} vertex {v}");
+        }
+    }
+}
+
+/// Empty update batches leave ranks untouched for every dynamic approach.
+#[test]
+fn prop_empty_batch_fixed_point() {
+    let cfg = PagerankConfig::default();
+    for seed in 100..106u64 {
+        let b = random_builder(seed);
+        let g = b.to_csr();
+        let gt = g.transpose();
+        let prev = native::static_pagerank(&g, &gt, &cfg, None).ranks;
+        let empty = BatchUpdate::default();
+
+        let df = native::dynamic::dynamic_frontier(&g, &gt, &cfg, &prev, &empty, false);
+        assert_eq!(l1_distance(&df.ranks, &prev), 0.0, "DF seed {seed}");
+        let dfp = native::dynamic::dynamic_frontier(&g, &gt, &cfg, &prev, &empty, true);
+        assert_eq!(l1_distance(&dfp.ranks, &prev), 0.0, "DF-P seed {seed}");
+        let dt = native::dynamic::dynamic_traversal(&g, &gt, &g, &cfg, &prev, &empty);
+        assert_eq!(l1_distance(&dt.ranks, &prev), 0.0, "DT seed {seed}");
+    }
+}
+
+/// In-degree hubs rank near the top on web-like graphs.
+#[test]
+fn prop_hub_dominance_on_weblike() {
+    let cfg = PagerankConfig::default();
+    let g = rmat::generate(10, 10.0, rmat::RmatParams::WEB, 7).to_csr();
+    let gt = g.transpose();
+    let ranks = native::static_pagerank(&g, &gt, &cfg, None).ranks;
+    let (hub, _) = (0..g.num_vertices() as u32)
+        .map(|v| (v, gt.degree(v)))
+        .max_by_key(|&(_, d)| d)
+        .unwrap();
+    let hub_rank = ranks[hub as usize];
+    let better = ranks.iter().filter(|&&r| r > hub_rank).count();
+    assert!(better < g.num_vertices() / 50, "hub beaten by {better}");
+}
