@@ -11,7 +11,13 @@ use pagerank_dynamic::PagerankConfig;
 
 fn main() {
     let cfg = PagerankConfig::default();
-    let store = std::sync::Arc::new(ArtifactStore::open_default().expect("make artifacts"));
+    let store = match ArtifactStore::open_default() {
+        Ok(s) => std::sync::Arc::new(s),
+        Err(e) => {
+            println!("bench skipped: {e} (run `make artifacts`)");
+            return;
+        }
+    };
     let runner = Runner { store: Some(store), cfg };
 
     for name in ["com-LiveJournal", "asia_osm"] {

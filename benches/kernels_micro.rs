@@ -1,16 +1,28 @@
-//! Bench: kernel-level microbenchmarks — per-launch latency of each
-//! artifact (step variants, expansions, peeks, the standalone Pallas
-//! kernels) across tiers. This is the L1/L2 profile that drives the perf
-//! pass (EXPERIMENTS.md §Perf).
+//! Bench: kernel-level microbenchmarks.
+//!
+//! Part 1 (always runs): the native engine's constituent kernels — the
+//! per-iteration pull step (contrib + degree-partitioned rank update), the
+//! parallel frontier expansion, and the parallel graph builders (transpose,
+//! edge-list CSR, Algorithm 4 partition) — swept over threads 1/2/4/max,
+//! written as machine-readable `BENCH_native_kernels.json`.
+//!
+//! Part 2: per-launch latency of each device artifact (step variants,
+//! expansions, peeks, the standalone Pallas kernels) across tiers — the
+//! L1/L2 profile that drives the perf pass (EXPERIMENTS.md §Perf). Requires
+//! compiled artifacts (`make artifacts`); skipped without them.
 
+use std::fmt::Write as _;
 use std::time::Instant;
 
-use pagerank_dynamic::engines::native;
+use pagerank_dynamic::engines::native::{self, affected};
 use pagerank_dynamic::generators::rmat;
+use pagerank_dynamic::graph::partition::partition_by_degree_threads;
+use pagerank_dynamic::graph::CsrGraph;
 use pagerank_dynamic::harness::fmt_dur;
-use pagerank_dynamic::runtime::exec::{buf_f64, buf_i32, exec1, GraphBufs};
 use pagerank_dynamic::runtime::artifacts::{lit_f64, lit_i32_2d, run};
+use pagerank_dynamic::runtime::exec::{buf_f64, buf_i32, exec1, GraphBufs};
 use pagerank_dynamic::runtime::ArtifactStore;
+use pagerank_dynamic::util::par;
 use pagerank_dynamic::PagerankConfig;
 
 const REPEATS: usize = 7;
@@ -26,8 +38,97 @@ fn bench_ns<F: FnMut()>(mut f: F) -> f64 {
     best
 }
 
-fn main() {
-    let store = ArtifactStore::open_default().expect("make artifacts");
+fn native_kernel_sweep() {
+    let cfg = PagerankConfig::default();
+    let b = rmat::generate(15, 10.0, rmat::RmatParams::WEB, 3);
+    let g = b.to_csr();
+    let gt = g.transpose();
+    let edges: Vec<(u32, u32)> = g.edges().collect();
+    let degrees = gt.degrees();
+    let n = g.num_vertices();
+    let m = g.num_edges();
+    println!(
+        "=== native kernels (RMAT web, n={n} m={m}, {} cores) ===",
+        par::available()
+    );
+
+    let mut sweep = vec![1usize, 2, 4, par::available()];
+    sweep.sort_unstable();
+    sweep.dedup();
+
+    let mut rows = String::new();
+    let mut record = |kernel: &str, threads: usize, secs: f64| {
+        println!(
+            "  {:<22} threads={:<3} {:>10}  ({:.1} Medges/s)",
+            kernel,
+            threads,
+            fmt_dur(std::time::Duration::from_secs_f64(secs)),
+            m as f64 / secs / 1e6
+        );
+        if !rows.is_empty() {
+            rows.push_str(",\n");
+        }
+        let _ = write!(
+            rows,
+            "    {{\"kernel\": \"{kernel}\", \"threads\": {threads}, \"seconds\": {secs:.9}}}"
+        );
+    };
+
+    for &t in &sweep {
+        // per-iteration pull step: contrib + degree-partitioned rank update
+        // (full static run divided by its iteration count)
+        let c = cfg.with_threads(t);
+        let mut iters = 1usize;
+        let run_secs = bench_ns(|| {
+            let r = native::static_pagerank(&g, &gt, &c, None);
+            iters = r.iterations.max(1);
+        });
+        record("step_plain_iter", t, run_secs / iters as f64);
+
+        record("transpose", t, bench_ns(|| {
+            std::hint::black_box(g.transpose_threads(t));
+        }));
+        record("from_edges", t, bench_ns(|| {
+            std::hint::black_box(CsrGraph::from_edges_threads(n, &edges, t));
+        }));
+        record("partition_by_degree", t, bench_ns(|| {
+            std::hint::black_box(partition_by_degree_threads(&degrees, 32, t));
+        }));
+
+        // frontier expansion with a ~10% frontier
+        let mut dn = vec![0u8; n];
+        for v in (0..n).step_by(10) {
+            dn[v] = 1;
+        }
+        record("expand_affected", t, bench_ns(|| {
+            let mut dv = vec![0u8; n];
+            affected::expand_affected_threads(&mut dv, &dn, &g, t);
+            std::hint::black_box(dv);
+        }));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"native_kernels_scaling\",\n  \"graph\": \
+         {{\"family\": \"rmat-web\", \"scale\": 15, \"n\": {n}, \"m\": {m}}},\n  \
+         \"available_parallelism\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+        par::available(),
+        rows
+    );
+    if let Err(e) = std::fs::write("BENCH_native_kernels.json", &json) {
+        eprintln!("could not write BENCH_native_kernels.json: {e}");
+    } else {
+        println!("  -> BENCH_native_kernels.json");
+    }
+}
+
+fn device_micro() {
+    let store = match ArtifactStore::open_default() {
+        Ok(s) => s,
+        Err(e) => {
+            println!("\n(device micro section skipped: {e})");
+            return;
+        }
+    };
     let cfg = PagerankConfig::default();
 
     for (tier_name, scale, deg) in [("t10", 9u32, 6.0), ("t13", 12, 8.0), ("t16", 15, 10.0)] {
@@ -141,4 +242,9 @@ fn main() {
             run(&exe, &[&a_lit, &b_lit]).unwrap();
         }));
     }
+}
+
+fn main() {
+    native_kernel_sweep();
+    device_micro();
 }

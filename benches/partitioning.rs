@@ -11,7 +11,13 @@ use pagerank_dynamic::PagerankConfig;
 
 fn main() {
     let cfg = PagerankConfig::default();
-    let store = ArtifactStore::open_default().expect("make artifacts");
+    let store = match ArtifactStore::open_default() {
+        Ok(s) => s,
+        Err(e) => {
+            println!("bench skipped: {e} (run `make artifacts`)");
+            return;
+        }
+    };
     let eng = DeviceEngine::new(&store);
 
     let d = families::dataset("it-2004").unwrap();

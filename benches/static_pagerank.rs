@@ -1,18 +1,26 @@
-//! Bench: Static PageRank end-to-end — device engine vs native CPU vs the
-//! Hornet-like / Gunrock-like baselines (paper Table 1 / Figure 2).
+//! Bench: Static PageRank end-to-end.
+//!
+//! Part 1 (always runs): native engine thread-scaling sweep on an RMAT
+//! web-family graph — threads 1/2/4/max on the scoped-thread pool — printed
+//! and written as machine-readable `BENCH_native_scaling.json`.
+//!
+//! Part 2: device engine vs native CPU vs the Hornet-like / Gunrock-like
+//! baselines (paper Table 1 / Figure 2). The device column requires
+//! compiled artifacts (`make artifacts`) and prints `-` without them.
 //!
 //! Plain-harness bench (offline build: no criterion): median of repeated
 //! runs with warmup, printed as an aligned table.
 
-
+use std::fmt::Write as _;
 
 use pagerank_dynamic::engines::baselines::{gunrock_like, hornet_like};
+use pagerank_dynamic::engines::device::DeviceEngine;
 use pagerank_dynamic::engines::native;
-use pagerank_dynamic::generators::families;
+use pagerank_dynamic::generators::{families, rmat};
 use pagerank_dynamic::harness::fmt_dur;
 use pagerank_dynamic::runtime::{ArtifactStore, DeviceGraph};
+use pagerank_dynamic::util::par;
 use pagerank_dynamic::PagerankConfig;
-use pagerank_dynamic::engines::device::DeviceEngine;
 
 const REPEATS: usize = 3;
 
@@ -27,37 +35,127 @@ fn bench<F: FnMut() -> std::time::Duration>(mut f: F) -> std::time::Duration {
     std::time::Duration::from_secs_f64(median(samples))
 }
 
+/// Thread counts to sweep: 1, 2, 4 and the full machine.
+fn sweep_threads() -> Vec<usize> {
+    let mut sweep = vec![1usize, 2, 4, par::available()];
+    sweep.sort_unstable();
+    sweep.dedup();
+    sweep
+}
+
+fn native_scaling_sweep(cfg: &PagerankConfig) {
+    let b = rmat::generate(16, 16.0, rmat::RmatParams::WEB, 42);
+    let g = b.to_csr();
+    let gt = g.transpose();
+    println!(
+        "native static PageRank thread scaling (RMAT web, n={}, m={}, {} cores):",
+        g.num_vertices(),
+        g.num_edges(),
+        par::available()
+    );
+
+    let mut rows = String::new();
+    let mut t1 = f64::NAN;
+    for t in sweep_threads() {
+        let c = cfg.with_threads(t);
+        let mut iterations = 0usize;
+        let d = bench(|| {
+            let r = native::static_pagerank(&g, &gt, &c, None);
+            iterations = r.iterations;
+            r.elapsed
+        });
+        let secs = d.as_secs_f64();
+        if t == 1 {
+            t1 = secs;
+        }
+        println!(
+            "  threads={:<3} {:>10}  ({} iters, speedup {:.2}x)",
+            t,
+            fmt_dur(d),
+            iterations,
+            t1 / secs
+        );
+        if !rows.is_empty() {
+            rows.push_str(",\n");
+        }
+        let _ = write!(
+            rows,
+            "    {{\"threads\": {t}, \"seconds\": {secs:.6}, \
+             \"iterations\": {iterations}, \"speedup_vs_1\": {:.4}}}",
+            t1 / secs
+        );
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"native_static_scaling\",\n  \"graph\": \
+         {{\"family\": \"rmat-web\", \"scale\": 16, \"n\": {}, \"m\": {}}},\n  \
+         \"available_parallelism\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+        g.num_vertices(),
+        g.num_edges(),
+        par::available(),
+        rows
+    );
+    if let Err(e) = std::fs::write("BENCH_native_scaling.json", &json) {
+        eprintln!("could not write BENCH_native_scaling.json: {e}");
+    } else {
+        println!("  -> BENCH_native_scaling.json");
+    }
+}
+
 fn main() {
     let cfg = PagerankConfig::default();
-    let store = ArtifactStore::open_default().expect("make artifacts");
-    let eng = DeviceEngine::new(&store);
+
+    native_scaling_sweep(&cfg);
+
+    let store = match ArtifactStore::open_default() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            println!("\n(device column skipped: {e})");
+            None
+        }
+    };
+    let eng = store.as_ref().map(DeviceEngine::new);
 
     println!(
-        "{:<18} {:>9} {:>9} {:>9} {:>9}  {:>8} {:>8}",
+        "\n{:<18} {:>9} {:>9} {:>9} {:>9}  {:>8} {:>8}",
         "graph", "hornet", "gunrock", "ours-CPU", "ours-GPU", "vs hor", "vs gun"
     );
     for name in ["it-2004", "sk-2005", "com-Orkut", "asia_osm", "kmer_A2a"] {
         let d = families::dataset(name).unwrap();
         let g = d.build().to_csr();
         let gt = g.transpose();
-        let tier = store.tier_for(g.num_vertices(), g.num_edges()).unwrap();
-        let dg = DeviceGraph::pack(&g, &gt, &tier).unwrap();
 
         let t_h = bench(|| hornet_like(&g, &cfg).elapsed);
         let t_g = bench(|| gunrock_like(&g, &cfg).elapsed);
         let t_c = bench(|| native::static_pagerank(&g, &gt, &cfg, None).elapsed);
-        let t_d = bench(|| eng.static_pagerank(&dg, &cfg, None).unwrap().elapsed);
+        let t_d = eng.as_ref().map(|eng| {
+            let store = store.as_ref().unwrap();
+            let tier = store.tier_for(g.num_vertices(), g.num_edges()).unwrap();
+            let dg = DeviceGraph::pack(&g, &gt, &tier).unwrap();
+            bench(|| eng.static_pagerank(&dg, &cfg, None).unwrap().elapsed)
+        });
 
-        println!(
-            "{:<18} {:>9} {:>9} {:>9} {:>9}  {:>7.1}x {:>7.1}x",
-            name,
-            fmt_dur(t_h),
-            fmt_dur(t_g),
-            fmt_dur(t_c),
-            fmt_dur(t_d),
-            t_h.as_secs_f64() / t_d.as_secs_f64(),
-            t_g.as_secs_f64() / t_d.as_secs_f64(),
-        );
+        match t_d {
+            Some(t_d) => println!(
+                "{:<18} {:>9} {:>9} {:>9} {:>9}  {:>7.1}x {:>7.1}x",
+                name,
+                fmt_dur(t_h),
+                fmt_dur(t_g),
+                fmt_dur(t_c),
+                fmt_dur(t_d),
+                t_h.as_secs_f64() / t_d.as_secs_f64(),
+                t_g.as_secs_f64() / t_d.as_secs_f64(),
+            ),
+            None => println!(
+                "{:<18} {:>9} {:>9} {:>9} {:>9}  {:>8} {:>8}",
+                name,
+                fmt_dur(t_h),
+                fmt_dur(t_g),
+                fmt_dur(t_c),
+                "-",
+                "-",
+                "-",
+            ),
+        }
     }
     println!("\n(paper: ours-GPU 31x vs Hornet, 5.9x vs Gunrock, 24x vs ours-CPU on A100)");
 }

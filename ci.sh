@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# CI gate: build, test, lint. Run from the repo root.
+#
+#   ./ci.sh            # full gate
+#   SKIP_CLIPPY=1 ./ci.sh   # build + test only (e.g. clippy not installed)
+#
+# Tier-1 (ROADMAP.md) is `cargo build --release && cargo test -q`; clippy
+# rides along with -D warnings so lint regressions fail the gate too.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: cargo not found on PATH — install the Rust toolchain first" >&2
+    exit 1
+fi
+
+echo "=== cargo build --release ==="
+cargo build --release
+
+echo "=== cargo test -q ==="
+cargo test -q
+
+if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "=== cargo clippy --all-targets -- -D warnings ==="
+        cargo clippy --all-targets -- -D warnings
+    else
+        echo "ci.sh: cargo-clippy not installed; skipping lint (set SKIP_CLIPPY=1 to silence)" >&2
+    fi
+fi
+
+echo "ci.sh: OK"

@@ -15,6 +15,11 @@ pub struct PagerankConfig {
     pub tau_prune: f64,
     /// MAX_ITERATIONS (paper: 500).
     pub max_iterations: usize,
+    /// Worker threads for the native engines' scoped-thread pool
+    /// (`util::par`). `0` (the default) means "all available cores";
+    /// `1` runs the same blocked loops inline (sequential). Results are
+    /// bit-identical at every setting — see `util::par`.
+    pub threads: usize,
 }
 
 impl Default for PagerankConfig {
@@ -25,6 +30,7 @@ impl Default for PagerankConfig {
             tau_frontier: 1e-6,
             tau_prune: 1e-6,
             max_iterations: 500,
+            threads: 0,
         }
     }
 }
@@ -34,6 +40,11 @@ impl PagerankConfig {
     /// tolerance so the run is capped by `max_iterations` (500).
     pub fn reference() -> Self {
         Self { tau: 1e-100, ..Self::default() }
+    }
+
+    /// This configuration with an explicit native-pool thread count.
+    pub fn with_threads(self, threads: usize) -> Self {
+        Self { threads, ..self }
     }
 }
 
@@ -49,5 +60,14 @@ mod tests {
         assert_eq!(c.tau_frontier, 1e-6);
         assert_eq!(c.tau_prune, 1e-6);
         assert_eq!(c.max_iterations, 500);
+        assert_eq!(c.threads, 0, "0 = use available parallelism");
+        assert!(crate::util::par::resolve(c.threads) >= 1);
+    }
+
+    #[test]
+    fn with_threads_builder() {
+        let c = PagerankConfig::default().with_threads(4);
+        assert_eq!(c.threads, 4);
+        assert_eq!(c.alpha, 0.85);
     }
 }

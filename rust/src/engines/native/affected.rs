@@ -1,7 +1,26 @@
 //! Affected-vertex marking (paper Algorithm 5 + the DT approach's BFS).
+//!
+//! `expandAffected` is the one push-direction kernel in the native engines:
+//! out-neighbors of every δ_N vertex get δ_V set. The parallel variant
+//! partitions the graph's *edge array* into fixed [`EXPAND_EDGE_BLOCK`]-sized
+//! ranges (out-degree partitioning: a hub's out-edges span many blocks and
+//! are pushed by many threads), each thread marking into its own private
+//! flag buffer, which are OR-merged after the barrier. Flag stores are
+//! idempotent (`= 1`), so the merge — and therefore the result — is
+//! independent of thread count and scheduling, with no atomics and no
+//! shared-buffer races.
 
 use crate::batch::BatchUpdate;
 use crate::graph::CsrGraph;
+use crate::util::par;
+
+/// Fixed edge-range granularity for the parallel push (independent of the
+/// thread count, so the work decomposition is reproducible).
+pub(crate) const EXPAND_EDGE_BLOCK: usize = 8192;
+
+/// Below this many edges the per-thread buffer setup costs more than the
+/// push itself; run the sequential loop.
+const EXPAND_PAR_CUTOFF: usize = 1 << 14;
 
 /// Algorithm 5 `initialAffected`: for each deletion (u,v), u's out-neighbors
 /// will be marked (δ_N[u]=1) and the target v is marked directly (δ_V[v]=1);
@@ -20,9 +39,8 @@ pub fn initial_affected(n: usize, batch: &BatchUpdate) -> (Vec<u8>, Vec<u8>) {
     (dv, dn)
 }
 
-/// Algorithm 5 `expandAffected`: mark out-neighbors of every vertex with
-/// δ_N set. Sequential here (the native engines call it on small frontiers;
-/// the device engines run the partitioned kernel instead).
+/// Algorithm 5 `expandAffected`, sequential: mark out-neighbors of every
+/// vertex with δ_N set. Reference semantics for [`expand_affected_threads`].
 pub fn expand_affected(dv: &mut [u8], dn: &[u8], g: &CsrGraph) {
     for u in 0..g.num_vertices() as u32 {
         if dn[u as usize] != 0 {
@@ -31,6 +49,69 @@ pub fn expand_affected(dv: &mut [u8], dn: &[u8], g: &CsrGraph) {
             }
         }
     }
+}
+
+/// Algorithm 5 `expandAffected` on the scoped-thread pool. Bit-identical to
+/// [`expand_affected`] at every `threads` setting (flags are 0/1 and stores
+/// are idempotent); falls back to the sequential loop for one thread or
+/// small graphs.
+pub fn expand_affected_threads(dv: &mut [u8], dn: &[u8], g: &CsrGraph, threads: usize) {
+    let threads = par::resolve(threads);
+    let m = g.num_edges();
+    if threads == 1 || m < EXPAND_PAR_CUTOFF {
+        expand_affected(dv, dn, g);
+        return;
+    }
+    let n = g.num_vertices();
+    let offsets = g.offsets();
+    let targets = g.targets();
+    let num_blocks = m.div_ceil(EXPAND_EDGE_BLOCK);
+
+    // push phase: fixed edge ranges round-robin across threads, each thread
+    // marking a private buffer
+    let locals: Vec<Vec<u8>> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            handles.push(s.spawn(move || {
+                let mut local = vec![0u8; n];
+                let mut bi = t;
+                while bi < num_blocks {
+                    let lo = bi * EXPAND_EDGE_BLOCK;
+                    let hi = (lo + EXPAND_EDGE_BLOCK).min(m);
+                    // last row whose edge range starts at or before lo
+                    let mut row = offsets.partition_point(|&o| (o as usize) <= lo) - 1;
+                    let mut idx = lo;
+                    while idx < hi {
+                        let row_end = (offsets[row + 1] as usize).min(hi);
+                        if dn[row] != 0 {
+                            for &v in &targets[idx..row_end] {
+                                local[v as usize] = 1;
+                            }
+                        }
+                        idx = row_end;
+                        row += 1;
+                    }
+                    bi += threads;
+                }
+                local
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("expand worker panicked"))
+            .collect()
+    });
+
+    // OR-merge after the barrier (blocked over δ_V; idempotent stores)
+    par::par_for(threads, par::DEFAULT_BLOCK, dv, |start, out| {
+        for local in &locals {
+            for (i, slot) in out.iter_mut().enumerate() {
+                if local[start + i] != 0 {
+                    *slot = 1;
+                }
+            }
+        }
+    });
 }
 
 /// The Dynamic Traversal approach's marking: flag everything reachable from
@@ -72,6 +153,7 @@ pub fn dt_affected(g_new: &CsrGraph, g_old: &CsrGraph, batch: &BatchUpdate) -> V
 mod tests {
     use super::*;
     use crate::graph::GraphBuilder;
+    use crate::util::Rng;
 
     fn line_graph(n: usize) -> CsrGraph {
         let mut b = GraphBuilder::new(n);
@@ -100,6 +182,47 @@ mod tests {
         let dn = vec![0, 1, 0, 0, 0];
         expand_affected(&mut dv, &dn, &g);
         // vertex 1's out-neighbors: itself (self-loop) and 2
+        assert_eq!(dv, vec![0, 1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn parallel_expand_matches_sequential_on_hub_graph() {
+        // star with a high out-degree hub: its edge range spans many blocks,
+        // so many threads push the same frontier vertex's neighbors — the
+        // regression shape for the OR-merge (a shared-buffer version races
+        // here and historically dropped flags)
+        let n = 60_000usize;
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for v in 0..n as u32 {
+            edges.push((0, v)); // hub 0 points everywhere
+            edges.push((v, (v + 1) % n as u32));
+        }
+        let g = CsrGraph::from_edges(n, &edges);
+        let mut rng = Rng::seed_from_u64(42);
+        let mut dn = vec![0u8; n];
+        dn[0] = 1; // the hub is in the frontier
+        for _ in 0..200 {
+            dn[(rng.next_u64() % n as u64) as usize] = 1;
+        }
+        let mut want = vec![0u8; n];
+        expand_affected(&mut want, &dn, &g);
+        for threads in [2, 3, 4, 8] {
+            let mut got = vec![0u8; n];
+            // pre-set flags must survive the merge
+            got[n - 1] = 1;
+            let mut want_t = want.clone();
+            want_t[n - 1] = 1;
+            expand_affected_threads(&mut got, &dn, &g, threads);
+            assert_eq!(got, want_t, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_expand_small_graph_falls_back() {
+        let g = line_graph(5);
+        let mut dv = vec![0u8; 5];
+        let dn = vec![0, 1, 0, 0, 0];
+        expand_affected_threads(&mut dv, &dn, &g, 4);
         assert_eq!(dv, vec![0, 1, 1, 0, 0]);
     }
 

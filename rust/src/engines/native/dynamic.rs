@@ -1,13 +1,22 @@
 //! Native DT / DF / DF-P PageRank (paper Algorithms 2-3, CPU substrate).
+//!
+//! Both approaches run their vertex passes on the scoped-thread pool with
+//! the same degree split as the static engine (low in-degree vertices
+//! blocked across threads, hubs via fixed-chunk partial sums), and DF/DF-P
+//! expand the frontier with the parallel push of
+//! [`expand_affected_threads`]. Decompositions are thread-count invariant,
+//! so ranks and iteration counts are bit-identical at every `threads`
+//! setting.
 
 use std::time::Instant;
 
-use super::affected::{dt_affected, expand_affected, initial_affected};
-use super::pull_contrib;
+use super::affected::{dt_affected, expand_affected_threads, initial_affected};
+use super::{compute_contrib, hub_partials, pull_contrib, StepPlan, HUB_IN_DEGREE};
 use crate::batch::BatchUpdate;
 use crate::engines::config::PagerankConfig;
 use crate::engines::PagerankResult;
 use crate::graph::CsrGraph;
+use crate::util::par;
 
 /// Dynamic Traversal: mark everything reachable from the update (BFS over
 /// old + new graph), then run masked Eq. 1 iterations over that fixed set.
@@ -21,6 +30,8 @@ pub fn dynamic_traversal(
 ) -> PagerankResult {
     let n = g.num_vertices();
     let start = Instant::now();
+    let threads = par::resolve(cfg.threads);
+    let plan = StepPlan::build(gt, threads);
     let aff = dt_affected(g, g_old, batch);
     let initially_affected = aff.iter().filter(|&&x| x != 0).count();
 
@@ -31,20 +42,51 @@ pub fn dynamic_traversal(
 
     let mut iterations = 0;
     for _ in 0..cfg.max_iterations {
-        for (u, c) in contrib.iter_mut().enumerate() {
-            *c = r[u] / g.degree(u as u32) as f64;
-        }
-        let mut linf = 0.0f64;
-        for (v, out) in r_new.iter_mut().enumerate() {
-            if aff[v] == 0 {
-                *out = r[v];
-                continue;
+        let dangling = compute_contrib(threads, g, &r, &mut contrib);
+        let c0_iter = c0 + cfg.alpha * (dangling / n as f64);
+
+        let aff_ref = &aff;
+        let r_ref = &r;
+        let contrib_ref = &contrib;
+        let mut linf = par::par_reduce(
+            threads,
+            par::DEFAULT_BLOCK,
+            &mut r_new,
+            0.0,
+            f64::max,
+            |start, out| {
+                let mut lmax = 0.0f64;
+                for (i, slot) in out.iter_mut().enumerate() {
+                    let v = start + i;
+                    if gt.degree(v as u32) > HUB_IN_DEGREE {
+                        continue; // hub pass below owns this slot
+                    }
+                    if aff_ref[v] == 0 {
+                        *slot = r_ref[v];
+                        continue;
+                    }
+                    let c = pull_contrib(gt, contrib_ref, v as u32);
+                    let nr = c0_iter + cfg.alpha * c;
+                    lmax = lmax.max((nr - r_ref[v]).abs());
+                    *slot = nr;
+                }
+                lmax
+            },
+        );
+        if !plan.hubs.is_empty() {
+            let partials = hub_partials(&plan, gt, &contrib, Some(&aff));
+            for (h, &v) in plan.hubs.iter().enumerate() {
+                let vi = v as usize;
+                if aff[vi] == 0 {
+                    r_new[vi] = r[vi];
+                    continue;
+                }
+                let nr = c0_iter + cfg.alpha * plan.hub_sum(&partials, h);
+                linf = linf.max((nr - r[vi]).abs());
+                r_new[vi] = nr;
             }
-            let c = pull_contrib(gt, &contrib, v as u32);
-            let nr = c0 + cfg.alpha * c;
-            linf = linf.max((nr - r[v]).abs());
-            *out = nr;
         }
+
         std::mem::swap(&mut r, &mut r_new);
         iterations += 1;
         if linf <= cfg.tau {
@@ -52,6 +94,39 @@ pub fn dynamic_traversal(
         }
     }
     PagerankResult { ranks: r, iterations, elapsed: start.elapsed(), initially_affected }
+}
+
+/// The DF/DF-P update for one affected vertex: new rank plus the frontier
+/// (δ_N) and prune (δ_V) decisions. `d_v = 0` (dead end) falls back to the
+/// Eq. 1 form — Eq. 2's closed loop is undefined without the self-loop.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn df_update(
+    c: f64,
+    d_v: f64,
+    old: f64,
+    c0: f64,
+    alpha: f64,
+    prune: bool,
+    cfg: &PagerankConfig,
+    dv: &mut u8,
+    dn: &mut u8,
+) -> (f64, f64) {
+    let nr = if prune && d_v > 0.0 {
+        // Eq. 2: K excludes the self-loop term of the old rank.
+        let k = c - old / d_v;
+        (alpha * k + c0) / (1.0 - alpha / d_v)
+    } else {
+        c0 + alpha * c
+    };
+    let delta = (nr - old).abs();
+    let denom = nr.max(old);
+    let rel = if denom > 0.0 { delta / denom } else { 0.0 };
+    if prune && rel <= cfg.tau_prune {
+        *dv = 0; // contract the affected set
+    }
+    *dn = (rel > cfg.tau_frontier) as u8; // expand later via expandAffected
+    (nr, delta)
 }
 
 /// Dynamic Frontier (`prune = false`) and DF with Pruning (`prune = true`):
@@ -68,9 +143,11 @@ pub fn dynamic_frontier(
 ) -> PagerankResult {
     let n = g.num_vertices();
     let start = Instant::now();
+    let threads = par::resolve(cfg.threads);
+    let plan = StepPlan::build(gt, threads);
 
     let (mut dv, mut dn) = initial_affected(n, batch);
-    expand_affected(&mut dv, &dn, g);
+    expand_affected_threads(&mut dv, &dn, g, threads);
     let initially_affected = dv.iter().filter(|&&x| x != 0).count();
 
     let mut r = prev.to_vec();
@@ -80,37 +157,67 @@ pub fn dynamic_frontier(
 
     let mut iterations = 0;
     for _ in 0..cfg.max_iterations {
-        for (u, c) in contrib.iter_mut().enumerate() {
-            *c = r[u] / g.degree(u as u32) as f64;
-        }
-        dn.iter_mut().for_each(|x| *x = 0);
+        let dangling = compute_contrib(threads, g, &r, &mut contrib);
+        let c0_iter = c0 + cfg.alpha * (dangling / n as f64);
 
-        let mut linf = 0.0f64;
-        for v in 0..n {
-            if dv[v] == 0 {
-                r_new[v] = r[v];
-                continue;
+        // one lockstep pass over (r_new, δ_V, δ_N): low in-degree vertices
+        // updated in place, hub slots only have δ_N cleared (the hub pass
+        // after the barrier owns the rest)
+        let r_ref = &r;
+        let contrib_ref = &contrib;
+        let mut linf = par::par_for3_reduce(
+            threads,
+            par::DEFAULT_BLOCK,
+            &mut r_new,
+            &mut dv,
+            &mut dn,
+            0.0,
+            f64::max,
+            |start, out, bdv, bdn| {
+                let mut lmax = 0.0f64;
+                for i in 0..out.len() {
+                    let v = start + i;
+                    if gt.degree(v as u32) > HUB_IN_DEGREE {
+                        bdn[i] = 0;
+                        continue;
+                    }
+                    if bdv[i] == 0 {
+                        out[i] = r_ref[v];
+                        bdn[i] = 0;
+                        continue;
+                    }
+                    let c = pull_contrib(gt, contrib_ref, v as u32);
+                    let d_v = g.degree(v as u32) as f64;
+                    let (nr, delta) = df_update(
+                        c, d_v, r_ref[v], c0_iter, cfg.alpha, prune, cfg,
+                        &mut bdv[i], &mut bdn[i],
+                    );
+                    out[i] = nr;
+                    lmax = lmax.max(delta);
+                }
+                lmax
+            },
+        );
+        // hubs: fixed-chunk partials in parallel, flag logic sequentially.
+        // The pass above never touches a hub's δ_V flag, so the mask read
+        // here is the pre-pass value, same as the sequential order.
+        if !plan.hubs.is_empty() {
+            let partials = hub_partials(&plan, gt, &contrib, Some(&dv));
+            for (h, &v) in plan.hubs.iter().enumerate() {
+                let vi = v as usize;
+                if dv[vi] == 0 {
+                    r_new[vi] = r[vi];
+                    continue;
+                }
+                let c = plan.hub_sum(&partials, h);
+                let d_v = g.degree(v) as f64;
+                let (nr, delta) = df_update(
+                    c, d_v, r[vi], c0_iter, cfg.alpha, prune, cfg,
+                    &mut dv[vi], &mut dn[vi],
+                );
+                r_new[vi] = nr;
+                linf = linf.max(delta);
             }
-            let c = pull_contrib(gt, &contrib, v as u32);
-            let d_v = g.degree(v as u32) as f64;
-            let nr = if prune {
-                // Eq. 2: K excludes the self-loop term of the old rank.
-                let k = c - r[v] / d_v;
-                (cfg.alpha * k + c0) / (1.0 - cfg.alpha / d_v)
-            } else {
-                c0 + cfg.alpha * c
-            };
-            let delta = (nr - r[v]).abs();
-            let denom = nr.max(r[v]);
-            let rel = if denom > 0.0 { delta / denom } else { 0.0 };
-            if prune && rel <= cfg.tau_prune {
-                dv[v] = 0; // contract the affected set
-            }
-            if rel > cfg.tau_frontier {
-                dn[v] = 1; // expand later via expandAffected
-            }
-            r_new[v] = nr;
-            linf = linf.max(delta);
         }
 
         std::mem::swap(&mut r, &mut r_new);
@@ -118,7 +225,7 @@ pub fn dynamic_frontier(
         if linf <= cfg.tau {
             break;
         }
-        expand_affected(&mut dv, &dn, g);
+        expand_affected_threads(&mut dv, &dn, g, threads);
     }
     PagerankResult { ranks: r, iterations, elapsed: start.elapsed(), initially_affected }
 }
@@ -174,7 +281,7 @@ mod tests {
         let g = b.to_csr();
         let dt = dt_affected(&g, &old_g, &upd);
         let (mut dv, dn) = initial_affected(g.num_vertices(), &upd);
-        expand_affected(&mut dv, &dn, &g);
+        expand_affected_threads(&mut dv, &dn, &g, 1);
         // DF's initial affected (minus deletion targets, which DT only
         // reaches if connected) is reachable from update sources -> subset.
         for v in 0..g.num_vertices() {

@@ -1,10 +1,32 @@
-//! Native (multicore CPU) engines — the paper's parallel CPU comparator
+//! Native multicore CPU engines — the paper's parallel CPU comparator
 //! [49], used directly for the GPU-vs-CPU comparisons (Figures 6-8) and as
 //! the fallback for graphs larger than the biggest device tier.
 //!
 //! All five approaches use the same synchronous pull-based formulation as
 //! the device engines: two rank vectors, one write per vertex per
-//! iteration, L∞ convergence detection.
+//! iteration, L∞ convergence detection. Iterations run on the scoped-thread
+//! work pool (`util::par`, thread count from [`PagerankConfig::threads`])
+//! with the paper's two-kernel degree split (Algorithm 4 via
+//! `graph::partition::partition_by_degree`):
+//!
+//! * **low in-degree** vertices are chunked across threads in fixed vertex
+//!   blocks, each vertex's in-neighbor sum accumulated left-to-right;
+//! * **hub** vertices (in-degree > [`HUB_IN_DEGREE`]) get per-thread
+//!   partial sums over *fixed* [`HUB_EDGE_CHUNK`]-sized in-edge ranges,
+//!   combined in fixed chunk order.
+//!
+//! Because the blocking is a function of the graph only — never of the
+//! thread count — ranks are bit-identical at every `threads` setting, and
+//! `threads = 1` runs the same loops inline (no atomics anywhere on the
+//! rank path).
+//!
+//! Dead ends: a vertex with no out-edges would divide by zero in the
+//! contribution pass (the paper sidesteps this by inserting self-loops at
+//! load time). The engines instead apply the standard teleport fallback: a
+//! dead end contributes `0` along edges and its rank mass is redistributed
+//! uniformly (`α·dangling/n` joins the teleport constant). On self-looped
+//! graphs the dangling mass is exactly `0.0` and the update is bit-for-bit
+//! the paper's Eq. 1.
 
 pub mod affected;
 pub mod asynchronous;
@@ -14,7 +36,16 @@ use std::time::Instant;
 
 use super::config::PagerankConfig;
 use super::PagerankResult;
-use crate::graph::CsrGraph;
+use crate::graph::{partition_by_degree, CsrGraph};
+use crate::util::par;
+
+/// In-degree above which a vertex takes the hub (edge-chunked) path.
+pub(crate) const HUB_IN_DEGREE: u32 = 1024;
+
+/// Fixed in-edge chunk size for hub partial sums. Independent of the thread
+/// count, so the summation tree — and hence the floating-point result — is
+/// identical at every `threads` setting.
+pub(crate) const HUB_EDGE_CHUNK: usize = 4096;
 
 /// c[v] = Σ_{u ∈ G.in(v)} r[u]/outdeg(u) for one vertex, pulled over the
 /// transpose adjacency.
@@ -23,9 +54,111 @@ pub(crate) fn pull_contrib(gt: &CsrGraph, contrib: &[f64], v: u32) -> f64 {
     gt.neighbors(v).iter().map(|&u| contrib[u as usize]).sum()
 }
 
-/// One synchronous iteration of Eq. 1 over all vertices. Returns the L∞
-/// delta. `contrib[u]` must hold `r[u]/outdeg(u)`.
-fn step_plain(
+/// Degree-partitioned schedule for the pull step over `gt`, built once per
+/// run (Algorithm 4): the hub list plus a fixed decomposition of every
+/// hub's in-edge range into [`HUB_EDGE_CHUNK`]-sized work items.
+pub(crate) struct StepPlan {
+    /// Resolved pool width.
+    pub threads: usize,
+    /// High in-degree vertices, in `partition_by_degree` (ascending) order.
+    pub hubs: Vec<u32>,
+    /// (index into `hubs`, absolute edge range in `gt.targets()`).
+    items: Vec<(u32, usize, usize)>,
+    /// `items[item_start[h]..item_start[h+1]]` belong to `hubs[h]`.
+    item_start: Vec<usize>,
+}
+
+impl StepPlan {
+    pub(crate) fn build(gt: &CsrGraph, threads: usize) -> StepPlan {
+        let threads = par::resolve(threads);
+        let p = partition_by_degree(&gt.degrees(), HUB_IN_DEGREE);
+        let hubs: Vec<u32> = p.high().to_vec();
+        let mut items = Vec::new();
+        let mut item_start = Vec::with_capacity(hubs.len() + 1);
+        item_start.push(0);
+        let offsets = gt.offsets();
+        for (h, &v) in hubs.iter().enumerate() {
+            let end = offsets[v as usize + 1] as usize;
+            let mut lo = offsets[v as usize] as usize;
+            while lo < end {
+                let hi = (lo + HUB_EDGE_CHUNK).min(end);
+                items.push((h as u32, lo, hi));
+                lo = hi;
+            }
+            item_start.push(items.len());
+        }
+        StepPlan { threads, hubs, items, item_start }
+    }
+
+    /// Fold hub `h`'s chunk partials in fixed (chunk) order.
+    pub(crate) fn hub_sum(&self, partials: &[f64], h: usize) -> f64 {
+        partials[self.item_start[h]..self.item_start[h + 1]].iter().sum()
+    }
+}
+
+/// Parallel partial sums for every hub in-edge chunk. With `active`, chunks
+/// of inactive hubs are skipped (their partials stay `0.0`; callers must
+/// not consume them). Chunk boundaries come from the plan, so the result is
+/// thread-count invariant.
+pub(crate) fn hub_partials(
+    plan: &StepPlan,
+    gt: &CsrGraph,
+    contrib: &[f64],
+    active: Option<&[u8]>,
+) -> Vec<f64> {
+    let mut partials = vec![0.0f64; plan.items.len()];
+    let items = &plan.items;
+    let hubs = &plan.hubs;
+    let targets = gt.targets();
+    par::par_for(plan.threads, 1, &mut partials, |idx, slot| {
+        let (h, lo, hi) = items[idx];
+        if let Some(mask) = active {
+            if mask[hubs[h as usize] as usize] == 0 {
+                return;
+            }
+        }
+        slot[0] = targets[lo..hi].iter().map(|&u| contrib[u as usize]).sum();
+    });
+    partials
+}
+
+/// Fill `contrib[u] = r[u]/outdeg(u)` (0 for dead ends) on the pool and
+/// return the dangling rank mass (deterministic block-ordered sum; exactly
+/// `0.0` when the graph has no dead ends).
+pub(crate) fn compute_contrib(
+    threads: usize,
+    g: &CsrGraph,
+    r: &[f64],
+    contrib: &mut [f64],
+) -> f64 {
+    par::par_reduce(
+        threads,
+        par::DEFAULT_BLOCK,
+        contrib,
+        0.0,
+        |a, b| a + b,
+        |start, out| {
+            let mut dangling = 0.0f64;
+            for (i, c) in out.iter_mut().enumerate() {
+                let u = start + i;
+                let d = g.degree(u as u32);
+                if d == 0 {
+                    *c = 0.0;
+                    dangling += r[u];
+                } else {
+                    *c = r[u] / d as f64;
+                }
+            }
+            dangling
+        },
+    )
+}
+
+/// One synchronous iteration of Eq. 1 over all vertices, degree-partitioned
+/// across the pool. Returns the L∞ delta. `contrib[u]` must hold
+/// `r[u]/outdeg(u)`; `c0` may include the dangling teleport term.
+pub(crate) fn step_plain(
+    plan: &StepPlan,
     gt: &CsrGraph,
     contrib: &[f64],
     r: &[f64],
@@ -33,12 +166,37 @@ fn step_plain(
     c0: f64,
     alpha: f64,
 ) -> f64 {
-    let mut linf = 0.0f64;
-    for (v, out) in r_new.iter_mut().enumerate() {
-        let c = pull_contrib(gt, contrib, v as u32);
-        let nr = c0 + alpha * c;
-        linf = linf.max((nr - r[v]).abs());
-        *out = nr;
+    // low in-degree vertices: blocked across threads, per-vertex
+    // left-to-right sums (identical to the sequential loop)
+    let mut linf = par::par_reduce(
+        plan.threads,
+        par::DEFAULT_BLOCK,
+        r_new,
+        0.0,
+        f64::max,
+        |start, out| {
+            let mut lmax = 0.0f64;
+            for (i, slot) in out.iter_mut().enumerate() {
+                let v = (start + i) as u32;
+                if gt.degree(v) > HUB_IN_DEGREE {
+                    continue; // hub pass below owns this slot
+                }
+                let c = pull_contrib(gt, contrib, v);
+                let nr = c0 + alpha * c;
+                lmax = lmax.max((nr - r[start + i]).abs());
+                *slot = nr;
+            }
+            lmax
+        },
+    );
+    // hubs: parallel fixed-chunk partials, sequential fixed-order combine
+    if !plan.hubs.is_empty() {
+        let partials = hub_partials(plan, gt, contrib, None);
+        for (h, &v) in plan.hubs.iter().enumerate() {
+            let nr = c0 + alpha * plan.hub_sum(&partials, h);
+            linf = linf.max((nr - r[v as usize]).abs());
+            r_new[v as usize] = nr;
+        }
     }
     linf
 }
@@ -52,8 +210,9 @@ pub fn static_pagerank(
     r0: Option<&[f64]>,
 ) -> PagerankResult {
     let n = g.num_vertices();
-    debug_assert!(g.has_no_dead_ends());
     let start = Instant::now();
+    let threads = par::resolve(cfg.threads);
+    let plan = StepPlan::build(gt, threads);
 
     let mut r: Vec<f64> = match r0 {
         Some(prev) => prev.to_vec(),
@@ -65,10 +224,9 @@ pub fn static_pagerank(
 
     let mut iterations = 0;
     for _ in 0..cfg.max_iterations {
-        for (u, c) in contrib.iter_mut().enumerate() {
-            *c = r[u] / g.degree(u as u32) as f64;
-        }
-        let linf = step_plain(gt, &contrib, &r, &mut r_new, c0, cfg.alpha);
+        let dangling = compute_contrib(threads, g, &r, &mut contrib);
+        let c0_iter = c0 + cfg.alpha * (dangling / n as f64);
+        let linf = step_plain(&plan, gt, &contrib, &r, &mut r_new, c0_iter, cfg.alpha);
         std::mem::swap(&mut r, &mut r_new);
         iterations += 1;
         if linf <= cfg.tau {
@@ -145,5 +303,38 @@ mod tests {
         let gt = g.transpose();
         let res = static_pagerank(&g, &gt, &PagerankConfig::default(), None);
         assert!(res.ranks[0] > res.ranks[1] * 5.0);
+    }
+
+    #[test]
+    fn dead_end_teleport_fallback_is_finite_and_stochastic() {
+        // vertex 1 has no out-edges; in release this used to yield NaN ranks
+        let g = CsrGraph::from_edges(3, &[(0, 1), (2, 0), (2, 1)]);
+        let gt = g.transpose();
+        let res = static_pagerank(&g, &gt, &PagerankConfig::default(), None);
+        assert!(res.ranks.iter().all(|r| r.is_finite() && *r > 0.0));
+        assert!(ranks_sum_to_one(&res.ranks), "teleport fallback preserves mass");
+    }
+
+    #[test]
+    fn hub_path_bitwise_stable_across_thread_counts() {
+        // star center has in-degree n-1 > HUB_IN_DEGREE: exercises the
+        // fixed-chunk hub pass at every thread count
+        let n = 3000usize;
+        let mut adj: Vec<Vec<u32>> = (0..n).map(|v| vec![v as u32]).collect();
+        for v in 1..n {
+            adj[v].push(0);
+        }
+        let g = CsrGraph::from_adjacency(&adj);
+        let gt = g.transpose();
+        assert!(gt.degree(0) > HUB_IN_DEGREE);
+        let base = static_pagerank(&g, &gt, &PagerankConfig::default().with_threads(1), None);
+        for threads in [2, 4, 8] {
+            let cfg = PagerankConfig::default().with_threads(threads);
+            let res = static_pagerank(&g, &gt, &cfg, None);
+            assert_eq!(res.iterations, base.iterations, "t={threads}");
+            for (a, b) in res.ranks.iter().zip(&base.ranks) {
+                assert_eq!(a.to_bits(), b.to_bits(), "t={threads}");
+            }
+        }
     }
 }

@@ -4,8 +4,23 @@
 //! graph (in-neighbors) and expands frontiers by pushing over the graph
 //! itself (out-neighbors); [`CsrGraph`] stores one direction and
 //! [`CsrGraph::transpose`] produces the other.
+//!
+//! The edge-list and transpose builders run their counting and placement
+//! passes on the scoped-thread pool (`util::par`): each thread histograms a
+//! contiguous edge range, a single fused pass turns the per-thread
+//! histograms into row offsets and per-thread write cursors, and placement
+//! scatters through [`par::DisjointWriter`] (every edge has a unique
+//! precomputed slot). Because the ranges are contiguous and ascending, each
+//! row's neighbor order is the original edge order — the output is
+//! *identical* (not just equivalent) to the sequential build at every
+//! thread count.
 
 use super::VertexId;
+use crate::util::par;
+
+/// Below this many edges the parallel build's histogram setup dominates;
+/// run the sequential counting sort.
+const PAR_BUILD_CUTOFF: usize = 1 << 15;
 
 /// Immutable CSR adjacency: `targets[offsets[v]..offsets[v+1]]` are the
 /// neighbors of `v` (out-neighbors by convention; a transposed instance
@@ -14,6 +29,25 @@ use super::VertexId;
 pub struct CsrGraph {
     offsets: Vec<u64>,
     targets: Vec<VertexId>,
+}
+
+/// Fuse per-thread histograms (thread-major, `n` entries each) into row
+/// offsets and in-place write cursors: after this, `hists[t*n + v]` is the
+/// first target slot for thread `t`'s edges with row `v`, and
+/// `offsets[v]` is the start of row `v`. Returns the edge total.
+fn cursors_from_histograms(n: usize, hists: &mut [u64], offsets: &mut [u64]) -> u64 {
+    let lanes = hists.len() / n;
+    let mut acc = 0u64;
+    for v in 0..n {
+        offsets[v] = acc;
+        for t in 0..lanes {
+            let h = hists[t * n + v];
+            hists[t * n + v] = acc;
+            acc += h;
+        }
+    }
+    offsets[n] = acc;
+    acc
 }
 
 impl CsrGraph {
@@ -35,8 +69,61 @@ impl CsrGraph {
     }
 
     /// Build from an edge list (`n` fixes the vertex count; isolated vertices
-    /// get empty rows). Uses a counting pass + placement pass, no sorting.
+    /// get empty rows). Counting pass + placement pass, no sorting; runs on
+    /// the pool for large inputs (`threads = 0` means all cores) with output
+    /// identical to the sequential build.
+    pub fn from_edges_threads(
+        n: usize,
+        edges: &[(VertexId, VertexId)],
+        threads: usize,
+    ) -> Self {
+        let threads = par::resolve(threads);
+        if threads == 1 || edges.len() < PAR_BUILD_CUTOFF {
+            return Self::from_edges_seq(n, edges);
+        }
+        let chunk = edges.len().div_ceil(threads);
+        let lanes = edges.len().div_ceil(chunk);
+
+        // parallel counting: one histogram per contiguous edge range
+        let mut hists = vec![0u64; lanes * n];
+        std::thread::scope(|s| {
+            for (hist, part) in hists.chunks_mut(n).zip(edges.chunks(chunk)) {
+                s.spawn(move || {
+                    for &(u, _) in part {
+                        hist[u as usize] += 1;
+                    }
+                });
+            }
+        });
+
+        let mut offsets = vec![0u64; n + 1];
+        cursors_from_histograms(n, &mut hists, &mut offsets);
+
+        // parallel placement: each thread replays its range against its own
+        // cursors; slots are disjoint by construction
+        let mut targets = vec![0 as VertexId; edges.len()];
+        let writer = par::DisjointWriter::new(&mut targets);
+        let writer = &writer;
+        std::thread::scope(|s| {
+            for (hist, part) in hists.chunks_mut(n).zip(edges.chunks(chunk)) {
+                s.spawn(move || {
+                    for &(u, v) in part {
+                        let c = &mut hist[u as usize];
+                        unsafe { writer.write(*c as usize, v) };
+                        *c += 1;
+                    }
+                });
+            }
+        });
+        Self { offsets, targets }
+    }
+
+    /// [`CsrGraph::from_edges_threads`] with the full pool.
     pub fn from_edges(n: usize, edges: &[(VertexId, VertexId)]) -> Self {
+        Self::from_edges_threads(n, edges, 0)
+    }
+
+    fn from_edges_seq(n: usize, edges: &[(VertexId, VertexId)]) -> Self {
         let mut counts = vec![0u64; n + 1];
         for &(u, _) in edges {
             counts[u as usize + 1] += 1;
@@ -88,8 +175,71 @@ impl CsrGraph {
             .collect()
     }
 
-    /// Transposed graph (in-neighbors become out-neighbors).
+    /// Transposed graph (in-neighbors become out-neighbors), built with the
+    /// same parallel counting-sort as [`CsrGraph::from_edges_threads`];
+    /// identical output at every thread count.
+    pub fn transpose_threads(&self, threads: usize) -> CsrGraph {
+        let threads = par::resolve(threads);
+        let m = self.targets.len();
+        if threads == 1 || m < PAR_BUILD_CUTOFF {
+            return self.transpose_seq();
+        }
+        let n = self.num_vertices();
+        let chunk = m.div_ceil(threads);
+        let lanes = m.div_ceil(chunk);
+
+        // parallel counting over contiguous target ranges
+        let mut hists = vec![0u64; lanes * n];
+        std::thread::scope(|s| {
+            for (hist, part) in hists.chunks_mut(n).zip(self.targets.chunks(chunk)) {
+                s.spawn(move || {
+                    for &v in part {
+                        hist[v as usize] += 1;
+                    }
+                });
+            }
+        });
+
+        let mut toffsets = vec![0u64; n + 1];
+        cursors_from_histograms(n, &mut hists, &mut toffsets);
+
+        // parallel placement: each thread walks its edge range, recovering
+        // the source row from the forward offsets
+        let offsets = &self.offsets;
+        let targets = &self.targets;
+        let mut ttargets = vec![0 as VertexId; m];
+        let writer = par::DisjointWriter::new(&mut ttargets);
+        let writer = &writer;
+        std::thread::scope(|s| {
+            for (li, hist) in hists.chunks_mut(n).enumerate() {
+                s.spawn(move || {
+                    let lo = li * chunk;
+                    let hi = (lo + chunk).min(m);
+                    // last row whose edge range starts at or before lo
+                    let mut row = offsets.partition_point(|&o| (o as usize) <= lo) - 1;
+                    let mut idx = lo;
+                    while idx < hi {
+                        let row_end = (offsets[row + 1] as usize).min(hi);
+                        for &v in &targets[idx..row_end] {
+                            let c = &mut hist[v as usize];
+                            unsafe { writer.write(*c as usize, row as VertexId) };
+                            *c += 1;
+                        }
+                        idx = row_end;
+                        row += 1;
+                    }
+                });
+            }
+        });
+        CsrGraph { offsets: toffsets, targets: ttargets }
+    }
+
+    /// [`CsrGraph::transpose_threads`] with the full pool.
     pub fn transpose(&self) -> CsrGraph {
+        self.transpose_threads(0)
+    }
+
+    fn transpose_seq(&self) -> CsrGraph {
         let n = self.num_vertices();
         let mut counts = vec![0u64; n + 1];
         for &t in &self.targets {
@@ -119,7 +269,9 @@ impl CsrGraph {
     }
 
     /// True if every vertex has at least one out-edge (no dead ends). The
-    /// paper eliminates dead ends by adding self-loops at load time.
+    /// paper eliminates dead ends by adding self-loops at load time; the
+    /// native engines instead survive dead ends via the teleport fallback
+    /// (see `engines::native`).
     pub fn has_no_dead_ends(&self) -> bool {
         (0..self.num_vertices() as VertexId).all(|v| self.degree(v) > 0)
     }
@@ -140,6 +292,7 @@ impl CsrGraph {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
 
     fn diamond() -> CsrGraph {
         // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3, 3 -> 0
@@ -176,6 +329,27 @@ mod tests {
             a.sort_unstable();
             b.sort_unstable();
             assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn parallel_build_identical_to_sequential() {
+        // above the cutoff, with skewed sources so histograms are uneven
+        let n = 5_000usize;
+        let mut rng = Rng::seed_from_u64(99);
+        let edges: Vec<(u32, u32)> = (0..80_000)
+            .map(|_| {
+                let u = (rng.gen_range(n) * rng.gen_range(n) / n) as u32; // skew
+                let v = rng.gen_range(n) as u32;
+                (u, v)
+            })
+            .collect();
+        let seq = CsrGraph::from_edges_seq(n, &edges);
+        for threads in [2, 3, 4, 8] {
+            let parl = CsrGraph::from_edges_threads(n, &edges, threads);
+            assert_eq!(parl, seq, "from_edges t={threads}");
+            assert_eq!(parl.transpose_threads(threads), seq.transpose_seq(),
+                "transpose t={threads}");
         }
     }
 

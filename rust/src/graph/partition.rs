@@ -8,8 +8,18 @@
 //! scheduling, and the packers in `runtime::tier` use it to route vertices
 //! between the ELL ("thread-per-vertex") and hub-chunk ("block-per-vertex")
 //! kernels.
+//!
+//! On the scoped-thread pool, populate and placement are blocked
+//! parallel-for passes and the scan is the classic three-phase blocked
+//! exclusive scan (per-chunk totals in parallel, a sequential scan over the
+//! chunk totals, then parallel per-chunk offset scans). All arithmetic is
+//! integral, so the result is identical at every thread count.
 
 use super::VertexId;
+use crate::util::par;
+
+/// Below this many vertices the sequential passes win outright.
+const PAR_PARTITION_CUTOFF: usize = 1 << 15;
 
 /// Result of Algorithm 4: `ids` holds all vertex ids with the `n_low`
 /// low-degree ones first.
@@ -29,7 +39,7 @@ impl Partition {
     }
 }
 
-/// Exclusive prefix sum, in place; returns the total.
+/// Exclusive prefix sum, in place; returns the total. Sequential reference.
 fn exclusive_scan(buf: &mut [u64]) -> u64 {
     let mut acc = 0u64;
     for x in buf.iter_mut() {
@@ -40,40 +50,90 @@ fn exclusive_scan(buf: &mut [u64]) -> u64 {
     acc
 }
 
-/// Partition vertex ids by `degrees[v] <= threshold` (Algorithm 4).
-///
-/// Two passes per class: populate a 0/1 buffer, exclusive-scan it, then
-/// place ids at their scanned positions. (Single-core testbed: the parallel
-/// populate/placement passes of the paper's Algorithm 4 degenerate to plain
-/// loops; the scan is sequential either way.)
-pub fn partition_by_degree(degrees: &[u32], threshold: u32) -> Partition {
-    let n = degrees.len();
-    let mut buf: Vec<u64> = vec![0; n];
-
-    // low-degree class
-    for (b, &d) in buf.iter_mut().zip(degrees.iter()) {
-        *b = (d <= threshold) as u64;
+/// Blocked parallel exclusive prefix sum, in place; returns the total.
+/// Phase 1 sums each contiguous chunk in parallel, phase 2 exclusive-scans
+/// the chunk totals sequentially, phase 3 rescans each chunk in parallel
+/// seeded with its chunk offset.
+pub(crate) fn exclusive_scan_threads(buf: &mut [u64], threads: usize) -> u64 {
+    let threads = par::resolve(threads);
+    if threads == 1 || buf.len() < PAR_PARTITION_CUTOFF {
+        return exclusive_scan(buf);
     }
-    let mut low_pos = buf.clone();
-    let n_low = exclusive_scan(&mut low_pos) as usize;
+    let chunk = buf.len().div_ceil(threads);
 
-    // high-degree class
-    for (b, &d) in buf.iter_mut().zip(degrees.iter()) {
-        *b = (d > threshold) as u64;
-    }
-    let mut high_pos = buf;
-    exclusive_scan(&mut high_pos);
+    let mut totals: Vec<u64> = std::thread::scope(|s| {
+        let handles: Vec<_> = buf
+            .chunks(chunk)
+            .map(|part| s.spawn(move || part.iter().sum::<u64>()))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("scan worker")).collect()
+    });
+    let total = exclusive_scan(&mut totals);
 
-    let mut ids = vec![0 as VertexId; n];
-    // placement: every vertex has a unique target slot
-    for v in 0..n {
-        if degrees[v] <= threshold {
-            ids[low_pos[v] as usize] = v as VertexId;
-        } else {
-            ids[n_low + high_pos[v] as usize] = v as VertexId;
+    std::thread::scope(|s| {
+        for (part, &seed) in buf.chunks_mut(chunk).zip(totals.iter()) {
+            s.spawn(move || {
+                let mut acc = seed;
+                for x in part.iter_mut() {
+                    let v = *x;
+                    *x = acc;
+                    acc += v;
+                }
+            });
         }
-    }
+    });
+    total
+}
+
+/// Partition vertex ids by `degrees[v] <= threshold` (Algorithm 4) on the
+/// scoped-thread pool (`threads = 0` means all cores; small inputs and
+/// `threads = 1` run the same passes sequentially, with identical results).
+pub fn partition_by_degree_threads(
+    degrees: &[u32],
+    threshold: u32,
+    threads: usize,
+) -> Partition {
+    let threads = par::resolve(threads);
+    let n = degrees.len();
+
+    // populate the low-degree 0/1 buffer (parallel blocked pass)
+    let mut low_pos: Vec<u64> = vec![0; n];
+    par::par_for(threads, par::DEFAULT_BLOCK, &mut low_pos, |start, out| {
+        for (i, b) in out.iter_mut().enumerate() {
+            *b = (degrees[start + i] <= threshold) as u64;
+        }
+    });
+    // the high-degree buffer is its complement
+    let mut high_pos: Vec<u64> = vec![0; n];
+    par::par_for(threads, par::DEFAULT_BLOCK, &mut high_pos, |start, out| {
+        for (i, b) in out.iter_mut().enumerate() {
+            *b = (degrees[start + i] > threshold) as u64;
+        }
+    });
+
+    let n_low = exclusive_scan_threads(&mut low_pos, threads) as usize;
+    exclusive_scan_threads(&mut high_pos, threads);
+
+    // placement: every vertex has a unique target slot
+    let mut ids = vec![0 as VertexId; n];
+    let writer = par::DisjointWriter::new(&mut ids);
+    let writer = &writer;
+    par::par_for_index(threads, par::DEFAULT_BLOCK, n, |start, end| {
+        for v in start..end {
+            let slot = if degrees[v] <= threshold {
+                low_pos[v] as usize
+            } else {
+                n_low + high_pos[v] as usize
+            };
+            unsafe { writer.write(slot, v as VertexId) };
+        }
+    });
     Partition { ids, n_low }
+}
+
+/// [`partition_by_degree_threads`] with the full pool.
+pub fn partition_by_degree(degrees: &[u32], threshold: u32) -> Partition {
+    partition_by_degree_threads(degrees, threshold, 0)
 }
 
 #[cfg(test)]
@@ -110,5 +170,29 @@ mod tests {
         // stability within classes: ids ascending in each class
         assert!(p.low().windows(2).all(|w| w[0] < w[1]));
         assert!(p.high().windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn parallel_scan_matches_sequential() {
+        // above the cutoff so the three-phase path actually runs
+        let vals: Vec<u64> = (0..40_000u64).map(|i| (i * 2654435761) % 97).collect();
+        let mut want = vals.clone();
+        let want_total = exclusive_scan(&mut want);
+        for threads in [2, 3, 4, 8] {
+            let mut got = vals.clone();
+            let total = exclusive_scan_threads(&mut got, threads);
+            assert_eq!(total, want_total, "t={threads}");
+            assert_eq!(got, want, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_partition_matches_sequential_large() {
+        let degrees: Vec<u32> = (0..50_000).map(|i| ((i * 7919) % 4000) as u32).collect();
+        let want = partition_by_degree_threads(&degrees, 1024, 1);
+        for threads in [2, 4, 8] {
+            let got = partition_by_degree_threads(&degrees, 1024, threads);
+            assert_eq!(got, want, "t={threads}");
+        }
     }
 }

@@ -2,7 +2,7 @@
 //!
 //! Every runner prints the paper's rows/series as an aligned table and
 //! writes `bench_results/<exp>.json`. Absolute numbers are testbed numbers
-//! (XLA-CPU "GPU", rayon CPU); the *shape* — which approach wins, by what
+//! (XLA-CPU "GPU", scoped-thread-pool CPU); the *shape* — which approach wins, by what
 //! factor, where crossovers fall — is the reproduction target, and
 //! EXPERIMENTS.md records paper-vs-measured side by side.
 
@@ -67,7 +67,8 @@ impl ExpOptions {
 pub enum Substrate {
     /// AOT artifacts on PJRT — the paper's GPU.
     Device,
-    /// rayon multicore — the paper's CPU comparator.
+    /// Scoped-thread-pool multicore (`util::par`) — the paper's CPU
+    /// comparator.
     Native,
 }
 

@@ -210,9 +210,20 @@ mod tests {
         here.join("artifacts")
     }
 
+    /// Manifest, or `None` on checkouts without compiled artifacts (the
+    /// device path is optional; `make artifacts` produces them).
+    fn load_or_skip() -> Option<Manifest> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+            return None;
+        }
+        Some(Manifest::load(&dir).expect("manifest parses"))
+    }
+
     #[test]
     fn loads_real_manifest() {
-        let m = Manifest::load(&artifacts_dir()).expect("make artifacts first");
+        let Some(m) = load_or_skip() else { return };
         assert_eq!(m.constants.alpha, 0.85);
         assert_eq!(m.constants.ell_width, 16);
         assert!(m.tier("t10").is_some());
@@ -223,7 +234,7 @@ mod tests {
 
     #[test]
     fn tier_fit_logic() {
-        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let Some(m) = load_or_skip() else { return };
         let t10 = m.tier("t10").unwrap();
         assert!(t10.fits(1023, 1 << 14));
         assert!(!t10.fits(1024, 10)); // sentinel slot reserved
@@ -234,7 +245,7 @@ mod tests {
 
     #[test]
     fn artifact_files_exist() {
-        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let Some(m) = load_or_skip() else { return };
         assert!(!m.artifacts.is_empty());
         for a in &m.artifacts {
             let p = m.artifact_path(a);
@@ -245,7 +256,7 @@ mod tests {
 
     #[test]
     fn input_shapes_match_tier() {
-        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let Some(m) = load_or_skip() else { return };
         let t = m.tier("t10").unwrap();
         let a = m.artifact("step_plain", "t10").unwrap();
         let by_name: HashMap<&str, &InputSpec> =

@@ -1,7 +1,9 @@
-//! Self-contained substrates for the offline build: deterministic RNG and
-//! minimal JSON (replacing the `rand` / `serde_json` crates).
+//! Self-contained substrates for the offline build: deterministic RNG,
+//! minimal JSON (replacing the `rand` / `serde_json` crates), and the
+//! scoped-thread work pool the native engines run on (replacing `rayon`).
 
 pub mod json;
+pub mod par;
 pub mod rng;
 
 pub use rng::Rng;

@@ -1,0 +1,376 @@
+//! Scoped-thread work pool for the native engines (std-only; offline build
+//! has no rayon). The primitives here share one design rule: **the work
+//! decomposition is a function of the input size only, never of the thread
+//! count**. Blocks have a fixed size, each block's result is computed by
+//! exactly one thread, and per-block partials are reduced in ascending
+//! block order. Floating-point results are therefore bit-identical at every
+//! thread count — `threads = 1` runs the same blocked loops inline — and
+//! the rank path needs no atomics (matching the paper's atomics-free GPU
+//! design).
+//!
+//! Threads are spawned per parallel region with [`std::thread::scope`],
+//! which lets closures borrow the caller's slices directly. Blocks are
+//! dealt to lanes round-robin (block `i` → lane `i mod threads`), a static
+//! schedule that keeps the region barrier-light; an amortized persistent
+//! pool is a recorded follow-on (ROADMAP "Open items").
+
+use std::marker::PhantomData;
+
+/// Default vertices-per-block granularity for rank-vector passes.
+pub const DEFAULT_BLOCK: usize = 2048;
+
+/// Number of hardware threads available to this process.
+pub fn available() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a configured thread count: `0` means "all available cores".
+pub fn resolve(threads: usize) -> usize {
+    if threads == 0 {
+        available()
+    } else {
+        threads
+    }
+}
+
+/// Chunked parallel-for over disjoint mutable blocks of `data`.
+///
+/// `f(start, block)` receives the absolute index of the block's first
+/// element and the mutable block itself. Blocks are `block`-sized (last one
+/// ragged) regardless of `threads`.
+pub fn par_for<T, F>(threads: usize, block: usize, data: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(block > 0);
+    let threads = threads.max(1);
+    if threads == 1 || data.len() <= block {
+        for (bi, chunk) in data.chunks_mut(block).enumerate() {
+            f(bi * block, chunk);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut lanes: Vec<Vec<(usize, &mut [T])>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (bi, chunk) in data.chunks_mut(block).enumerate() {
+            lanes[bi % threads].push((bi * block, chunk));
+        }
+        for lane in lanes {
+            if lane.is_empty() {
+                continue;
+            }
+            s.spawn(move || {
+                for (start, chunk) in lane {
+                    f(start, chunk);
+                }
+            });
+        }
+    });
+}
+
+type ReduceLane<'a, T> = Vec<(usize, &'a mut [T], &'a mut f64)>;
+
+/// Chunked parallel map-reduce: like [`par_for`], but `f` returns a per-block
+/// partial and the partials are folded with `combine` in ascending block
+/// order — a fixed-shape reduction, so the result is independent of thread
+/// count and scheduling (exactly so for `max`; for `+` the partial sums are
+/// over fixed blocks, hence also reproducible).
+pub fn par_reduce<T, F>(
+    threads: usize,
+    block: usize,
+    data: &mut [T],
+    init: f64,
+    combine: fn(f64, f64) -> f64,
+    f: F,
+) -> f64
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) -> f64 + Sync,
+{
+    assert!(block > 0);
+    let threads = threads.max(1);
+    let nblocks = data.len().div_ceil(block);
+    let mut partials = vec![init; nblocks];
+    if threads == 1 || data.len() <= block {
+        for (bi, (chunk, slot)) in
+            data.chunks_mut(block).zip(partials.iter_mut()).enumerate()
+        {
+            *slot = f(bi * block, chunk);
+        }
+    } else {
+        std::thread::scope(|s| {
+            let f = &f;
+            let mut lanes: Vec<ReduceLane<'_, T>> =
+                (0..threads).map(|_| Vec::new()).collect();
+            for (bi, (chunk, slot)) in
+                data.chunks_mut(block).zip(partials.iter_mut()).enumerate()
+            {
+                lanes[bi % threads].push((bi * block, chunk, slot));
+            }
+            for lane in lanes {
+                if lane.is_empty() {
+                    continue;
+                }
+                s.spawn(move || {
+                    for (start, chunk, slot) in lane {
+                        *slot = f(start, chunk);
+                    }
+                });
+            }
+        });
+    }
+    partials.into_iter().fold(init, combine)
+}
+
+type ReduceLane3<'a, A, B, C> =
+    Vec<(usize, &'a mut [A], &'a mut [B], &'a mut [C], &'a mut f64)>;
+
+/// Three-slice lockstep variant of [`par_reduce`]: the DF/DF-P vertex pass
+/// mutates the new rank vector and both flag vectors at the same index, so
+/// all three are chunked with identical block boundaries and handed to `f`
+/// together.
+#[allow(clippy::too_many_arguments)]
+pub fn par_for3_reduce<A, B, C, F>(
+    threads: usize,
+    block: usize,
+    a: &mut [A],
+    b: &mut [B],
+    c: &mut [C],
+    init: f64,
+    combine: fn(f64, f64) -> f64,
+    f: F,
+) -> f64
+where
+    A: Send,
+    B: Send,
+    C: Send,
+    F: Fn(usize, &mut [A], &mut [B], &mut [C]) -> f64 + Sync,
+{
+    assert!(block > 0);
+    assert!(a.len() == b.len() && b.len() == c.len());
+    let threads = threads.max(1);
+    let nblocks = a.len().div_ceil(block);
+    let mut partials = vec![init; nblocks];
+    if threads == 1 || a.len() <= block {
+        let it = a
+            .chunks_mut(block)
+            .zip(b.chunks_mut(block))
+            .zip(c.chunks_mut(block))
+            .zip(partials.iter_mut());
+        for (bi, (((ca, cb), cc), slot)) in it.enumerate() {
+            *slot = f(bi * block, ca, cb, cc);
+        }
+    } else {
+        std::thread::scope(|s| {
+            let f = &f;
+            let mut lanes: Vec<ReduceLane3<'_, A, B, C>> =
+                (0..threads).map(|_| Vec::new()).collect();
+            let it = a
+                .chunks_mut(block)
+                .zip(b.chunks_mut(block))
+                .zip(c.chunks_mut(block))
+                .zip(partials.iter_mut());
+            for (bi, (((ca, cb), cc), slot)) in it.enumerate() {
+                lanes[bi % threads].push((bi * block, ca, cb, cc, slot));
+            }
+            for lane in lanes {
+                if lane.is_empty() {
+                    continue;
+                }
+                s.spawn(move || {
+                    for (start, ca, cb, cc, slot) in lane {
+                        *slot = f(start, ca, cb, cc);
+                    }
+                });
+            }
+        });
+    }
+    partials.into_iter().fold(init, combine)
+}
+
+/// Blocked parallel-for over an index range `0..n` (no slice to chunk):
+/// `f(start, end)` is called once per fixed-size block, blocks dealt
+/// round-robin across the pool. `f` must only touch state that is disjoint
+/// per block (or use [`DisjointWriter`]).
+pub fn par_for_index<F>(threads: usize, block: usize, n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    assert!(block > 0);
+    let threads = threads.max(1);
+    if threads == 1 || n <= block {
+        let mut start = 0;
+        while start < n {
+            f(start, (start + block).min(n));
+            start += block;
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        for t in 0..threads {
+            s.spawn(move || {
+                let mut bi = t;
+                loop {
+                    let start = bi * block;
+                    if start >= n {
+                        break;
+                    }
+                    f(start, (start + block).min(n));
+                    bi += threads;
+                }
+            });
+        }
+    });
+}
+
+/// Shared view of a mutable slice for scattered-but-provably-disjoint
+/// parallel writes (counting-sort placement in the CSR builders and the
+/// Algorithm 4 placement pass, where every element has a unique precomputed
+/// target slot that `chunks_mut` cannot express).
+pub struct DisjointWriter<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for DisjointWriter<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointWriter<'_, T> {}
+
+impl<'a, T: Copy> DisjointWriter<'a, T> {
+    pub fn new(data: &'a mut [T]) -> Self {
+        Self { ptr: data.as_mut_ptr(), len: data.len(), _marker: PhantomData }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `value` into slot `index`.
+    ///
+    /// # Safety
+    /// Callers must guarantee that, within one parallel region, each index
+    /// is written by at most one thread and never read concurrently.
+    /// `index` must be in bounds (checked only under debug assertions).
+    pub unsafe fn write(&self, index: usize, value: T) {
+        debug_assert!(index < self.len);
+        unsafe { self.ptr.add(index).write(value) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_for_writes_every_block() {
+        for threads in [1, 2, 3, 8] {
+            let mut data = vec![0usize; 10_007];
+            par_for(threads, 64, &mut data, |start, chunk| {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = start + i;
+                }
+            });
+            assert!(data.iter().enumerate().all(|(i, &x)| x == i), "t={threads}");
+        }
+    }
+
+    #[test]
+    fn par_reduce_is_thread_count_invariant() {
+        // pseudo-random values: the fold order must not depend on threads
+        let vals: Vec<f64> = (0..50_000u64)
+            .map(|i| ((i.wrapping_mul(6364136223846793005).wrapping_add(1)) >> 11) as f64 / 1e18)
+            .collect();
+        let mut expect = None;
+        for threads in [1, 2, 4, 8] {
+            let mut data = vals.clone();
+            let sum = par_reduce(threads, 128, &mut data, 0.0, |a, b| a + b, |_, chunk| {
+                chunk.iter().sum()
+            });
+            let max = par_reduce(threads, 128, &mut data, 0.0, f64::max, |_, chunk| {
+                chunk.iter().copied().fold(0.0, f64::max)
+            });
+            match expect {
+                None => expect = Some((sum, max)),
+                Some((s, m)) => {
+                    assert_eq!(s.to_bits(), sum.to_bits(), "sum drifted at t={threads}");
+                    assert_eq!(m.to_bits(), max.to_bits(), "max drifted at t={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_for3_keeps_lockstep_blocks() {
+        for threads in [1, 4] {
+            let n = 5_000;
+            let mut a = vec![0.0f64; n];
+            let mut b = vec![0u8; n];
+            let mut c = vec![0u8; n];
+            let total = par_for3_reduce(
+                threads,
+                33,
+                &mut a,
+                &mut b,
+                &mut c,
+                0.0,
+                |x, y| x + y,
+                |start, ca, cb, cc| {
+                    assert_eq!(ca.len(), cb.len());
+                    assert_eq!(cb.len(), cc.len());
+                    for i in 0..ca.len() {
+                        ca[i] = (start + i) as f64;
+                        cb[i] = 1;
+                        cc[i] = 2;
+                    }
+                    ca.len() as f64
+                },
+            );
+            assert_eq!(total, n as f64);
+            assert!(a.iter().enumerate().all(|(i, &x)| x == i as f64));
+            assert!(b.iter().all(|&x| x == 1) && c.iter().all(|&x| x == 2));
+        }
+    }
+
+    #[test]
+    fn par_for_index_covers_range_once() {
+        use std::sync::Mutex;
+        for threads in [1, 2, 5] {
+            let seen = Mutex::new(vec![0u32; 1_234]);
+            par_for_index(threads, 100, 1_234, |start, end| {
+                let mut s = seen.lock().unwrap();
+                for i in start..end {
+                    s[i] += 1;
+                }
+            });
+            assert!(seen.into_inner().unwrap().iter().all(|&x| x == 1));
+        }
+    }
+
+    #[test]
+    fn disjoint_writer_scattered_permutation() {
+        let n = 4_096usize;
+        let mut out = vec![0u32; n];
+        let w = DisjointWriter::new(&mut out);
+        // scatter i -> slot (i * 5) % n (5 coprime with 4096: a permutation)
+        par_for_index(4, 64, n, |start, end| {
+            for i in start..end {
+                unsafe { w.write(i * 5 % n, i as u32) };
+            }
+        });
+        let mut seen = vec![false; n];
+        for (slot, &v) in out.iter().enumerate() {
+            assert_eq!((v as usize * 5) % n, slot);
+            assert!(!seen[v as usize]);
+            seen[v as usize] = true;
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Parallel == sequential for every native approach (the tentpole
+//! guarantee of the scoped-thread pool): ranks within 1e-12 L1 — in fact
+//! bit-identical, since the work decomposition is thread-count invariant —
+//! and identical iteration counts, across ER and RMAT (web-family, hubby)
+//! graphs and threads ∈ {1, 2, 4, 8}. Plus regression coverage for the
+//! OR-merged frontier expansion and the parallel graph builders.
+
+use pagerank_dynamic::batch;
+use pagerank_dynamic::engines::error::l1_distance;
+use pagerank_dynamic::engines::native::affected::{expand_affected, expand_affected_threads};
+use pagerank_dynamic::engines::native::dynamic::{dynamic_frontier, dynamic_traversal};
+use pagerank_dynamic::engines::native::{naive_dynamic, static_pagerank};
+use pagerank_dynamic::generators::{er, rmat};
+use pagerank_dynamic::graph::partition::partition_by_degree_threads;
+use pagerank_dynamic::graph::{CsrGraph, GraphBuilder};
+use pagerank_dynamic::PagerankConfig;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn test_graphs() -> Vec<GraphBuilder> {
+    vec![
+        er::generate(3_000, 6.0, 11),
+        rmat::generate(12, 8.0, rmat::RmatParams::WEB, 7), // skewed: hub path
+    ]
+}
+
+fn assert_same_ranks(tag: &str, base: &pagerank_dynamic::engines::PagerankResult,
+                     got: &pagerank_dynamic::engines::PagerankResult) {
+    assert_eq!(got.iterations, base.iterations, "{tag}: iteration count drifted");
+    assert!(
+        l1_distance(&got.ranks, &base.ranks) <= 1e-12,
+        "{tag}: ranks drifted by {}",
+        l1_distance(&got.ranks, &base.ranks)
+    );
+    for (i, (a, b)) in got.ranks.iter().zip(&base.ranks).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: rank {i} not bit-identical");
+    }
+}
+
+#[test]
+fn static_parallel_matches_sequential() {
+    for (gi, b) in test_graphs().into_iter().enumerate() {
+        let g = b.to_csr();
+        let gt = g.transpose();
+        let base = static_pagerank(&g, &gt, &PagerankConfig::default().with_threads(1), None);
+        for t in THREADS {
+            let res = static_pagerank(&g, &gt, &PagerankConfig::default().with_threads(t), None);
+            assert_same_ranks(&format!("static g{gi} t={t}"), &base, &res);
+        }
+    }
+}
+
+#[test]
+fn naive_dynamic_parallel_matches_sequential() {
+    for (gi, mut b) in test_graphs().into_iter().enumerate() {
+        let cfg1 = PagerankConfig::default().with_threads(1);
+        let prev = {
+            let g = b.to_csr();
+            let gt = g.transpose();
+            static_pagerank(&g, &gt, &cfg1, None).ranks
+        };
+        let upd = batch::random_batch(&b, 25, 0.8, 77);
+        batch::apply(&mut b, &upd);
+        let g = b.to_csr();
+        let gt = g.transpose();
+        let base = naive_dynamic(&g, &gt, &cfg1, &prev);
+        for t in THREADS {
+            let cfg = PagerankConfig::default().with_threads(t);
+            let res = naive_dynamic(&g, &gt, &cfg, &prev);
+            assert_same_ranks(&format!("ND g{gi} t={t}"), &base, &res);
+        }
+    }
+}
+
+#[test]
+fn frontier_approaches_parallel_match_sequential() {
+    for (gi, mut b) in test_graphs().into_iter().enumerate() {
+        let cfg1 = PagerankConfig::default().with_threads(1);
+        let old_g = b.to_csr();
+        let prev = {
+            let gt = old_g.transpose();
+            static_pagerank(&old_g, &gt, &cfg1, None).ranks
+        };
+        let upd = batch::random_batch(&b, 25, 0.8, 99);
+        batch::apply(&mut b, &upd);
+        let g = b.to_csr();
+        let gt = g.transpose();
+
+        for prune in [false, true] {
+            let base = dynamic_frontier(&g, &gt, &cfg1, &prev, &upd, prune);
+            for t in THREADS {
+                let cfg = PagerankConfig::default().with_threads(t);
+                let res = dynamic_frontier(&g, &gt, &cfg, &prev, &upd, prune);
+                assert_eq!(
+                    res.initially_affected, base.initially_affected,
+                    "DF prune={prune} g{gi} t={t}: affected set drifted"
+                );
+                assert_same_ranks(&format!("DF prune={prune} g{gi} t={t}"), &base, &res);
+            }
+        }
+
+        let base = dynamic_traversal(&g, &gt, &old_g, &cfg1, &prev, &upd);
+        for t in THREADS {
+            let cfg = PagerankConfig::default().with_threads(t);
+            let res = dynamic_traversal(&g, &gt, &old_g, &cfg, &prev, &upd);
+            assert_same_ranks(&format!("DT g{gi} t={t}"), &base, &res);
+        }
+    }
+}
+
+#[test]
+fn expansion_or_merge_race_regression() {
+    // Dense frontier pushing through high out-degree hubs: a shared-buffer
+    // expansion races exactly here (many threads pushing a hub's out-edges
+    // plus neighboring rows in the same edge blocks) and drops flags
+    // intermittently. The per-thread-buffer OR-merge must match the
+    // sequential push exactly, every time, at every width.
+    let b = rmat::generate(13, 10.0, rmat::RmatParams::WEB, 3);
+    let g = b.to_csr();
+    let n = g.num_vertices();
+    for trial in 0..5u64 {
+        let mut dn = vec![0u8; n];
+        // frontier = every 3rd vertex, phase-shifted per trial
+        for v in ((trial as usize) % 3..n).step_by(3) {
+            dn[v] = 1;
+        }
+        let mut want = vec![0u8; n];
+        expand_affected(&mut want, &dn, &g);
+        for t in [2, 4, 8] {
+            let mut got = vec![0u8; n];
+            expand_affected_threads(&mut got, &dn, &g, t);
+            assert_eq!(got, want, "trial={trial} threads={t}");
+        }
+    }
+}
+
+#[test]
+fn graph_builds_parallel_match_sequential() {
+    let b = rmat::generate(12, 8.0, rmat::RmatParams::WEB, 21);
+    let edges: Vec<(u32, u32)> = b.to_csr().edges().collect();
+    let n = b.to_csr().num_vertices();
+    let base = CsrGraph::from_edges_threads(n, &edges, 1);
+    let base_t = base.transpose_threads(1);
+    for t in THREADS {
+        let g = CsrGraph::from_edges_threads(n, &edges, t);
+        assert_eq!(g, base, "from_edges threads={t}");
+        assert_eq!(g.transpose_threads(t), base_t, "transpose threads={t}");
+    }
+}
+
+#[test]
+fn degree_partition_parallel_matches_sequential() {
+    let b = rmat::generate(13, 8.0, rmat::RmatParams::WEB, 5);
+    let degrees = b.to_csr().degrees();
+    for threshold in [4, 32, 1024] {
+        let base = partition_by_degree_threads(&degrees, threshold, 1);
+        for t in THREADS {
+            let p = partition_by_degree_threads(&degrees, threshold, t);
+            assert_eq!(p, base, "threshold={threshold} threads={t}");
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Vendored minimal stand-in for the `anyhow` crate (offline build: no
+//! registry access). Implements exactly the surface this workspace uses:
+//! [`Error`], [`Result`], the `anyhow!` / `bail!` / `ensure!` macros, and
+//! the [`Context`] extension trait for `Result` and `Option`.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`; that is what makes the blanket
+//! `From<E: std::error::Error>` impl coherent, so `?` converts any standard
+//! error (I/O, parse, ...) into [`Error`].
+
+use std::fmt;
+
+/// A string-backed error value with a flattened context chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` macro calls this).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer, anyhow-style (`"context: cause"`).
+    pub fn wrap<C: fmt::Display>(self, context: C) -> Self {
+        Self { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::Error::msg(::std::format!($($arg)*)))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::format!($($arg)*)));
+        }
+    };
+}
+
+/// Attach context to errors (`Result`) or missing values (`Option`).
+pub trait Context<T> {
+    /// Wrap the error/none case with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let x: i32 = s.parse()?; // exercises the blanket From impl
+        Ok(x)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let e = anyhow!("bad {}", 7);
+        assert_eq!(e.to_string(), "bad 7");
+
+        fn f() -> Result<()> {
+            bail!("inner {}", "cause");
+        }
+        let wrapped = f().context("outer");
+        assert_eq!(wrapped.unwrap_err().to_string(), "outer: inner cause");
+
+        let missing: Option<u8> = None;
+        let got = missing.with_context(|| format!("no {}", "value"));
+        assert_eq!(got.unwrap_err().to_string(), "no value");
+
+        fn g(ok: bool) -> Result<u8> {
+            ensure!(ok, "must hold ({ok})");
+            Ok(1)
+        }
+        assert!(g(true).is_ok());
+        assert!(g(false).is_err());
+    }
+}

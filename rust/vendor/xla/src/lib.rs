@@ -1,0 +1,169 @@
+//! API-compatible stub of the `xla` PJRT bindings used by `runtime::`.
+//!
+//! The offline build has no PJRT shared library and no registry access, so
+//! this crate mirrors exactly the type/method surface the workspace calls
+//! and reports the runtime as unavailable at the earliest entry point
+//! (`PjRtClient::cpu`). Everything downstream of a client therefore never
+//! executes, but still type-checks, keeping the device engine, artifact
+//! store, and device tests compiling; they gracefully skip at run time.
+//! Swapping in the real bindings is a Cargo.toml change only.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`: displayable, usable with `?` into
+/// `anyhow::Error` via the std-error blanket conversion.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Self {
+            msg: format!(
+                "{what}: XLA/PJRT runtime unavailable in this offline build \
+                 (vendored stub; install the real xla bindings to enable the device path)"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Stub PJRT client. `cpu()` always fails in the offline build.
+#[derive(Debug)]
+#[non_exhaustive]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("buffer_from_host_buffer"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compile"))
+    }
+}
+
+/// Stub device buffer (never constructed in the offline build).
+#[derive(Debug)]
+#[non_exhaustive]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("to_literal_sync"))
+    }
+}
+
+/// Stub compiled executable (never constructed in the offline build).
+#[derive(Debug)]
+#[non_exhaustive]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execute"))
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execute_b"))
+    }
+}
+
+/// Stub host literal. Constructible (the lit helpers build these before any
+/// device call), but all conversions report the runtime as unavailable.
+#[derive(Debug, Clone)]
+#[non_exhaustive]
+pub struct Literal {}
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal {}
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable("reshape"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("to_vec"))
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Err(Error::unavailable("shape"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("to_tuple"))
+    }
+}
+
+/// Literal/result shapes (only the tuple-ness is ever inspected).
+#[derive(Debug, Clone)]
+pub enum Shape {
+    Tuple(Vec<Shape>),
+    Array,
+}
+
+/// Stub HLO module proto; parsing always fails in the offline build.
+#[derive(Debug)]
+#[non_exhaustive]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Err(Error::unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// Stub computation wrapper.
+#[derive(Debug)]
+#[non_exhaustive]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_constructs_but_does_not_convert() {
+        let lit = Literal::vec1(&[1.0f64, 2.0]);
+        assert!(lit.to_vec::<f64>().is_err());
+        assert!(lit.clone().to_tuple().is_err());
+        assert!(lit.shape().is_err());
+    }
+}
