@@ -1,0 +1,97 @@
+//! Bench: cost of the robustness layer on the serving path.
+//!
+//! Measures the three per-update overheads the fault-hardened coordinator
+//! adds — batch validation, the rank-health watchdog check, and checkpoint
+//! capture / JSON roundtrip — so the "safety is cheap relative to an engine
+//! run" claim stays checkable as the layer evolves.
+
+use std::time::Instant;
+
+use pagerank_dynamic::batch::{self, validate, BatchUpdate};
+use pagerank_dynamic::coordinator::{Checkpoint, DynamicGraphService, HealthConfig};
+use pagerank_dynamic::coordinator::health::check_ranks;
+use pagerank_dynamic::engines::native;
+use pagerank_dynamic::generators::er;
+use pagerank_dynamic::harness::fmt_dur;
+use pagerank_dynamic::PagerankConfig;
+
+fn main() {
+    let cfg = PagerankConfig::default();
+    let n = 100_000;
+    let mut g = er::generate(n, 8.0, 42);
+    g.ensure_self_loops();
+    println!(
+        "graph: {} vertices, {} edges\n",
+        g.num_vertices(),
+        g.num_edges()
+    );
+
+    // --- batch validation throughput (clean and adversarial batches)
+    for (label, batch) in [
+        ("validate clean 10k", batch::random_batch(&g, 10_000, 0.8, 1)),
+        ("validate adversarial 10k", {
+            let mut b = BatchUpdate::default();
+            for i in 0..5_000u32 {
+                b.insertions.push((n as u32 + i, i)); // out of range
+                b.deletions.push((i % n as u32, i % n as u32)); // self-loop
+            }
+            b
+        }),
+    ] {
+        let t0 = Instant::now();
+        let iters = 20;
+        let mut quarantined = 0;
+        for _ in 0..iters {
+            quarantined = validate(&g, &batch).quarantined();
+        }
+        let per = t0.elapsed() / iters;
+        println!(
+            "{label:<26} {:>10} /batch  ({} quarantined, {:.1} Medits/s)",
+            fmt_dur(per),
+            quarantined,
+            batch.len() as f64 / per.as_secs_f64() / 1e6
+        );
+    }
+
+    // --- watchdog check throughput
+    let gc = g.to_csr();
+    let gt = gc.transpose();
+    let res = native::static_pagerank(&gc, &gt, &cfg, None);
+    let t0 = Instant::now();
+    let iters = 50;
+    for _ in 0..iters {
+        assert!(check_ranks(&res.ranks, n, res.iterations, &cfg, &HealthConfig::default())
+            .is_empty());
+    }
+    let per = t0.elapsed() / iters;
+    println!(
+        "{:<26} {:>10} /check  ({:.1} Mranks/s)",
+        "watchdog check_ranks",
+        fmt_dur(per),
+        n as f64 / per.as_secs_f64() / 1e6
+    );
+    println!(
+        "{:<26} {:>10} /run    (engine static run, for scale)",
+        "static_pagerank",
+        fmt_dur(res.elapsed)
+    );
+
+    // --- checkpoint capture and JSON roundtrip
+    let mut s = DynamicGraphService::new(g, None, cfg);
+    s.apply_update(BatchUpdate::default()).unwrap();
+    let t0 = Instant::now();
+    let cp = s.checkpoint();
+    println!("{:<26} {:>10}", "checkpoint capture", fmt_dur(t0.elapsed()));
+    let t0 = Instant::now();
+    let doc = cp.to_json();
+    println!(
+        "{:<26} {:>10}  ({:.1} MB)",
+        "checkpoint to_json",
+        fmt_dur(t0.elapsed()),
+        doc.len() as f64 / 1e6
+    );
+    let t0 = Instant::now();
+    let back = Checkpoint::from_json(&doc).unwrap();
+    println!("{:<26} {:>10}", "checkpoint from_json", fmt_dur(t0.elapsed()));
+    assert_eq!(back.edges.len(), cp.edges.len());
+}

@@ -17,8 +17,11 @@ fi
 echo "=== cargo build --release ==="
 cargo build --release
 
-echo "=== cargo test -q ==="
+echo "=== cargo test -q (dev profile: debug assertions on) ==="
 cargo test -q
+
+echo "=== cargo test -q --test robustness (fault-injection suite) ==="
+cargo test -q --test robustness
 
 if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
     if cargo clippy --version >/dev/null 2>&1; then

@@ -101,7 +101,7 @@ fn main() -> Result<()> {
     let total_queries: usize = readers.into_iter().map(|t| t.join().unwrap()).sum();
 
     // latency profile
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    latencies.sort_by(f64::total_cmp);
     let pct = |p: f64| latencies[(p * (latencies.len() - 1) as f64) as usize];
     let wall = t0.elapsed().as_secs_f64();
     println!("\n--- serving report ---");
@@ -124,7 +124,7 @@ fn main() -> Result<()> {
     let gt = g.transpose();
     let truth = reference_ranks(&g, &gt);
     let served: Vec<f64> = handle.ranks_of((0..n as u32).collect())?;
-    let err = l1_distance(&served, &truth);
+    let err = l1_distance(&served, &truth)?;
     println!("final L1 error vs from-scratch reference: {err:.3e}");
     assert!(err < 1e-2, "served ranks drifted: {err}");
     println!("dynamic_serving OK");

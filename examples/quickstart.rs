@@ -48,12 +48,12 @@ fn main() -> Result<()> {
     println!("native: {} iterations in {:?}", nat.iterations, nat.elapsed);
 
     // 4. agreement + top ranks
-    let err = l1_distance(&dev.ranks, &nat.ranks);
+    let err = l1_distance(&dev.ranks, &nat.ranks)?;
     println!("L1(device, native) = {err:.3e}");
     assert!(err < 1e-9, "engines disagree");
 
     let mut idx: Vec<usize> = (0..dev.ranks.len()).collect();
-    idx.sort_by(|&a, &b| dev.ranks[b].partial_cmp(&dev.ranks[a]).unwrap());
+    idx.sort_by(|&a, &b| dev.ranks[b].total_cmp(&dev.ranks[a]));
     println!("\ntop-5 vertices by rank:");
     for &v in idx.iter().take(5) {
         println!(

@@ -72,7 +72,7 @@ fn main() -> Result<()> {
             let res = runner.run(a, substrate, &g, &gt, &old, Some(&prev), upd)?;
             times.insert(a, res.elapsed);
             if a == Approach::DynamicFrontierPruning {
-                err_dfp = l1_distance(&res.ranks, &reference);
+                err_dfp = l1_distance(&res.ranks, &reference)?;
             }
             state.insert(a, res.ranks);
         }

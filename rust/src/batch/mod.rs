@@ -2,8 +2,12 @@
 //! plus the random batch generator of Section 5.1.4 (80% insertions / 20%
 //! deletions, vertex pairs uniform, deletions uniform over existing edges).
 
+pub mod validate;
+
 use crate::graph::{GraphBuilder, VertexId};
 use crate::util::Rng;
+
+pub use validate::{validate, EditKind, Rejection, UpdateError, ValidatedBatch};
 
 /// A batch update Δ^t: edge deletions Δ^t- and insertions Δ^t+.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]

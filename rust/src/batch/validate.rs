@@ -1,0 +1,305 @@
+//! Batch validation: classify every edit of a [`BatchUpdate`] against the
+//! live graph *before* anything is applied, so a malformed batch (out-of-range
+//! vertex id, duplicate insertion, phantom deletion) can never corrupt the
+//! CSR or panic the builder.
+//!
+//! The classification mirrors the apply order of [`crate::batch::apply`]
+//! (all deletions first, then all insertions), so intra-batch interactions —
+//! deleting the same edge twice, inserting an edge twice, or deleting and
+//! re-inserting one edge in a single batch — are resolved exactly the way
+//! the clean subset will later execute. The coordinator applies
+//! [`ValidatedBatch::clean`] and reports the quarantined remainder instead
+//! of failing the whole request.
+
+use std::collections::HashSet;
+use std::fmt;
+
+use super::BatchUpdate;
+use crate::graph::{GraphBuilder, VertexId};
+
+/// Which half of the batch an edit came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EditKind {
+    Insert,
+    Delete,
+}
+
+impl EditKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EditKind::Insert => "insert",
+            EditKind::Delete => "delete",
+        }
+    }
+}
+
+/// Why an edit was quarantined instead of applied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UpdateError {
+    /// An endpoint is `>= num_vertices` (the builder would panic on it).
+    OutOfRange { num_vertices: usize },
+    /// `u == v`: self-loops model dead-end elimination and are managed by
+    /// `ensure_self_loops`, never by client batches.
+    SelfLoop,
+    /// The edge already exists (in the graph, or inserted earlier in this
+    /// same batch).
+    DuplicateInsertion,
+    /// The edge does not exist (never inserted, or already deleted earlier
+    /// in this same batch).
+    PhantomDeletion,
+}
+
+impl UpdateError {
+    pub fn label(&self) -> &'static str {
+        match self {
+            UpdateError::OutOfRange { .. } => "out-of-range",
+            UpdateError::SelfLoop => "self-loop",
+            UpdateError::DuplicateInsertion => "duplicate-insertion",
+            UpdateError::PhantomDeletion => "phantom-deletion",
+        }
+    }
+}
+
+impl fmt::Display for UpdateError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            UpdateError::OutOfRange { num_vertices } => {
+                write!(f, "vertex id out of range (graph has {num_vertices} vertices)")
+            }
+            UpdateError::SelfLoop => write!(f, "self-loops are reserved for dead-end elimination"),
+            UpdateError::DuplicateInsertion => write!(f, "edge already present"),
+            UpdateError::PhantomDeletion => write!(f, "edge not present"),
+        }
+    }
+}
+
+impl std::error::Error for UpdateError {}
+
+/// One quarantined edit with its diagnosis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rejection {
+    pub kind: EditKind,
+    pub edge: (VertexId, VertexId),
+    pub error: UpdateError,
+}
+
+impl fmt::Display for Rejection {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} ({}, {}): {}",
+            self.kind.label(),
+            self.edge.0,
+            self.edge.1,
+            self.error
+        )
+    }
+}
+
+/// The outcome of validating a batch: the applicable subset plus a
+/// quarantine report for everything rejected.
+#[derive(Debug, Clone, Default)]
+pub struct ValidatedBatch {
+    /// Edits safe to apply, in original order within each half.
+    pub clean: BatchUpdate,
+    /// Edits rejected, with the reason each one was quarantined.
+    pub rejections: Vec<Rejection>,
+}
+
+impl ValidatedBatch {
+    pub fn quarantined(&self) -> usize {
+        self.rejections.len()
+    }
+
+    pub fn is_fully_clean(&self) -> bool {
+        self.rejections.is_empty()
+    }
+
+    /// One-line quarantine report (`"quarantined 3/10: out-of-range=2
+    /// phantom-deletion=1"`), empty string when nothing was rejected.
+    pub fn summary(&self) -> String {
+        if self.rejections.is_empty() {
+            return String::new();
+        }
+        let mut counts: Vec<(&'static str, usize)> = Vec::new();
+        for r in &self.rejections {
+            let label = r.error.label();
+            match counts.iter_mut().find(|(l, _)| *l == label) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((label, 1)),
+            }
+        }
+        let total = self.clean.len() + self.rejections.len();
+        let detail: Vec<String> =
+            counts.iter().map(|(l, c)| format!("{l}={c}")).collect();
+        format!("quarantined {}/{}: {}", self.rejections.len(), total, detail.join(" "))
+    }
+}
+
+/// Classify every edit of `batch` against the live graph `g`. Pure: neither
+/// the graph nor the batch is modified. Applying [`ValidatedBatch::clean`]
+/// via [`crate::batch::apply`] is guaranteed panic-free and changes exactly
+/// `clean.len()` edges.
+pub fn validate(g: &GraphBuilder, batch: &BatchUpdate) -> ValidatedBatch {
+    let n = g.num_vertices();
+    let mut out = ValidatedBatch::default();
+    let in_range = |u: VertexId, v: VertexId| (u as usize) < n && (v as usize) < n;
+
+    // Deletions run first (mirrors batch::apply). Track what this batch has
+    // deleted so a second deletion of the same edge is a phantom.
+    let mut deleted: HashSet<(VertexId, VertexId)> = HashSet::new();
+    for &(u, v) in &batch.deletions {
+        let reject = |error| Rejection { kind: EditKind::Delete, edge: (u, v), error };
+        if !in_range(u, v) {
+            out.rejections.push(reject(UpdateError::OutOfRange { num_vertices: n }));
+        } else if u == v {
+            out.rejections.push(reject(UpdateError::SelfLoop));
+        } else if !g.has_edge(u, v) || deleted.contains(&(u, v)) {
+            out.rejections.push(reject(UpdateError::PhantomDeletion));
+        } else {
+            deleted.insert((u, v));
+            out.clean.deletions.push((u, v));
+        }
+    }
+
+    // Insertions run second: an edge deleted above may be re-inserted; an
+    // edge inserted earlier in this batch is a duplicate.
+    let mut inserted: HashSet<(VertexId, VertexId)> = HashSet::new();
+    for &(u, v) in &batch.insertions {
+        let reject = |error| Rejection { kind: EditKind::Insert, edge: (u, v), error };
+        if !in_range(u, v) {
+            out.rejections.push(reject(UpdateError::OutOfRange { num_vertices: n }));
+        } else if u == v {
+            out.rejections.push(reject(UpdateError::SelfLoop));
+        } else {
+            let present =
+                (g.has_edge(u, v) && !deleted.contains(&(u, v))) || inserted.contains(&(u, v));
+            if present {
+                out.rejections.push(reject(UpdateError::DuplicateInsertion));
+            } else {
+                inserted.insert((u, v));
+                out.clean.insertions.push((u, v));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch;
+    use crate::generators::er;
+
+    fn graph() -> GraphBuilder {
+        let mut g = GraphBuilder::from_edges(5, [(0, 1), (1, 2), (2, 3)]);
+        g.ensure_self_loops();
+        g
+    }
+
+    #[test]
+    fn clean_batch_passes_untouched() {
+        let g = graph();
+        let b = BatchUpdate {
+            deletions: vec![(0, 1)],
+            insertions: vec![(3, 4), (4, 0)],
+        };
+        let v = validate(&g, &b);
+        assert!(v.is_fully_clean());
+        assert_eq!(v.clean, b);
+        assert_eq!(v.summary(), "");
+    }
+
+    #[test]
+    fn classifies_every_error_kind() {
+        let g = graph();
+        let b = BatchUpdate {
+            deletions: vec![
+                (5, 0), // out of range (id == num_vertices)
+                (1, 1), // self-loop (protected)
+                (3, 4), // phantom: never existed
+            ],
+            insertions: vec![
+                (0, 9), // out of range
+                (2, 2), // self-loop
+                (0, 1), // duplicate: already in graph
+                (4, 0), // ok
+                (4, 0), // duplicate within batch
+            ],
+        };
+        let v = validate(&g, &b);
+        assert_eq!(v.clean.deletions, vec![]);
+        assert_eq!(v.clean.insertions, vec![(4, 0)]);
+        assert_eq!(v.quarantined(), 7);
+        let errs: Vec<UpdateError> = v.rejections.iter().map(|r| r.error).collect();
+        assert_eq!(
+            errs,
+            vec![
+                UpdateError::OutOfRange { num_vertices: 5 },
+                UpdateError::SelfLoop,
+                UpdateError::PhantomDeletion,
+                UpdateError::OutOfRange { num_vertices: 5 },
+                UpdateError::SelfLoop,
+                UpdateError::DuplicateInsertion,
+                UpdateError::DuplicateInsertion,
+            ]
+        );
+        let s = v.summary();
+        assert!(s.contains("quarantined 7/8"), "{s}");
+        assert!(s.contains("out-of-range=2"), "{s}");
+        assert!(s.contains("self-loop=2"), "{s}");
+        assert!(s.contains("duplicate-insertion=2"), "{s}");
+        assert!(s.contains("phantom-deletion=1"), "{s}");
+    }
+
+    #[test]
+    fn intra_batch_delete_then_reinsert_is_clean() {
+        let g = graph();
+        // (0,1) exists: deleting then re-inserting it in one batch is legal
+        // under apply order (deletions first), so both edits pass.
+        let b = BatchUpdate { deletions: vec![(0, 1)], insertions: vec![(0, 1)] };
+        let v = validate(&g, &b);
+        assert!(v.is_fully_clean());
+        // but inserting an edge that was never there, "covered" by a phantom
+        // deletion of the same edge, quarantines only the deletion
+        let b = BatchUpdate { deletions: vec![(3, 0)], insertions: vec![(3, 0)] };
+        let v = validate(&g, &b);
+        assert_eq!(v.clean.deletions, vec![]);
+        assert_eq!(v.clean.insertions, vec![(3, 0)]);
+        assert_eq!(v.rejections[0].error, UpdateError::PhantomDeletion);
+    }
+
+    #[test]
+    fn double_deletion_second_is_phantom() {
+        let g = graph();
+        let b = BatchUpdate { deletions: vec![(0, 1), (0, 1)], insertions: vec![] };
+        let v = validate(&g, &b);
+        assert_eq!(v.clean.deletions, vec![(0, 1)]);
+        assert_eq!(v.rejections.len(), 1);
+        assert_eq!(v.rejections[0].error, UpdateError::PhantomDeletion);
+    }
+
+    #[test]
+    fn clean_subset_applies_without_panic_and_fully() {
+        let mut g = er::generate(100, 4.0, 11);
+        g.ensure_self_loops();
+        let b = BatchUpdate {
+            deletions: vec![(0, 0), (1_000, 3), (2, 1_000_000)],
+            insertions: vec![(7, 7), (500, 1), (1, 500)],
+        };
+        let v = validate(&g, &b);
+        assert!(v.clean.is_empty() || v.clean.len() < b.len());
+        let changed = batch::apply(&mut g, &v.clean);
+        assert_eq!(changed, v.clean.len(), "clean subset applies exactly");
+    }
+
+    #[test]
+    fn validate_random_batches_are_always_clean() {
+        let g = er::generate(300, 5.0, 3);
+        for seed in 0..5 {
+            let b = batch::random_batch(&g, 40, 0.8, seed);
+            let v = validate(&g, &b);
+            assert!(v.is_fully_clean(), "seed {seed}: {:?}", v.rejections);
+        }
+    }
+}

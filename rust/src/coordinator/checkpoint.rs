@@ -1,0 +1,259 @@
+//! Checkpoint/restore: periodic snapshots of (edge list, ranks, metrics,
+//! config) so a restarted — or supervisor-respawned — coordinator resumes
+//! warm from its last good state instead of recomputing from scratch.
+//!
+//! Two forms:
+//! * **in-memory** ([`Checkpoint`]): cloned into the server's shared slot
+//!   after updates; the supervisor rebuilds a panicked coordinator from it
+//!   (see [`super::server`]). It carries the full [`Metrics`] so counters
+//!   survive a respawn.
+//! * **JSON** ([`Checkpoint::to_json`] / [`Checkpoint::from_json`], via the
+//!   offline [`crate::util::json`] substrate): for persistence across
+//!   process restarts. Rust's shortest-roundtrip float formatting keeps the
+//!   rank bits exact across a serialize/parse cycle. Untrusted documents
+//!   are validated on load — out-of-range edges, wrong-length or non-finite
+//!   ranks are typed errors, never a panic downstream.
+
+use std::fmt::Write as _;
+
+use anyhow::{bail, Context, Result};
+
+use super::health::{check_ranks, HealthConfig, HealthError};
+use super::metrics::Metrics;
+use crate::engines::config::PagerankConfig;
+use crate::graph::VertexId;
+use crate::util::json::{self, Value};
+
+/// A consistent snapshot of the coordinator's evolving state.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Update sequence number at capture time (monotone per service).
+    pub seq: u64,
+    pub num_vertices: usize,
+    /// Every edge of the builder, self-loops included.
+    pub edges: Vec<(VertexId, VertexId)>,
+    /// Last-known-good ranks (`None` before the first computation).
+    pub ranks: Option<Vec<f64>>,
+    /// The serving configuration (restored services keep behaving the same).
+    pub cfg: PagerankConfig,
+    /// Serving counters at capture time.
+    pub metrics: Metrics,
+}
+
+impl Checkpoint {
+    /// Structural validation: every edge in range, ranks (if present) the
+    /// right length and finite. A checkpoint that fails this must not be
+    /// restored — it would re-poison the service it is meant to heal.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.num_vertices;
+        if let Some((u, v)) =
+            self.edges.iter().find(|&&(u, v)| u as usize >= n || v as usize >= n)
+        {
+            bail!("checkpoint edge ({u}, {v}) out of range for {n} vertices");
+        }
+        if let Some(r) = &self.ranks {
+            // converged state: iteration count 0 never trips the cap check
+            let violations =
+                check_ranks(r, n, 0, &self.cfg, &HealthConfig::default());
+            if !violations.is_empty() {
+                return Err(HealthError(violations).into());
+            }
+        }
+        self.cfg.validate().context("checkpoint config")?;
+        Ok(())
+    }
+
+    /// Serialize to a single JSON document.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(32 + self.edges.len() * 8);
+        let _ = write!(
+            s,
+            "{{\"format\":1,\"seq\":{},\"num_vertices\":{},\"cfg\":{{\"alpha\":{},\"tau\":{},\"tau_frontier\":{},\"tau_prune\":{},\"max_iterations\":{},\"threads\":{}}}",
+            self.seq,
+            self.num_vertices,
+            self.cfg.alpha,
+            self.cfg.tau,
+            self.cfg.tau_frontier,
+            self.cfg.tau_prune,
+            self.cfg.max_iterations,
+            self.cfg.threads
+        );
+        s.push_str(",\"edges\":[");
+        for (i, (u, v)) in self.edges.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{u},{v}");
+        }
+        s.push(']');
+        match &self.ranks {
+            None => s.push_str(",\"ranks\":null"),
+            Some(r) => {
+                s.push_str(",\"ranks\":[");
+                for (i, x) in r.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    let _ = write!(s, "{x}");
+                }
+                s.push(']');
+            }
+        }
+        let m = &self.metrics;
+        let _ = write!(
+            s,
+            ",\"counters\":{{\"updates_applied\":{},\"edges_inserted\":{},\"edges_deleted\":{},\"device_runs\":{},\"native_fallbacks\":{},\"quarantined_edits\":{},\"watchdog_trips\":{},\"health_recoveries\":{},\"restores\":{}}}}}",
+            m.updates_applied,
+            m.edges_inserted,
+            m.edges_deleted,
+            m.device_runs,
+            m.native_fallbacks,
+            m.quarantined_edits,
+            m.watchdog_trips,
+            m.health_recoveries,
+            m.restores
+        );
+        s
+    }
+
+    /// Parse and validate a JSON checkpoint. Per-approach latency stats are
+    /// not persisted; scalar counters are.
+    pub fn from_json(src: &str) -> Result<Checkpoint> {
+        let v = json::parse(src).context("checkpoint parse")?;
+        let format = v.get("format")?.as_usize()?;
+        if format != 1 {
+            bail!("unsupported checkpoint format {format}");
+        }
+        let seq = v.get("seq")?.as_usize()? as u64;
+        let num_vertices = v.get("num_vertices")?.as_usize()?;
+        let c = v.get("cfg")?;
+        let cfg = PagerankConfig {
+            alpha: c.get("alpha")?.as_f64()?,
+            tau: c.get("tau")?.as_f64()?,
+            tau_frontier: c.get("tau_frontier")?.as_f64()?,
+            tau_prune: c.get("tau_prune")?.as_f64()?,
+            max_iterations: c.get("max_iterations")?.as_usize()?,
+            threads: c.get("threads")?.as_usize()?,
+        };
+        let flat = v.get("edges")?.as_arr()?;
+        if flat.len() % 2 != 0 {
+            bail!("checkpoint edges array has odd length {}", flat.len());
+        }
+        let mut edges = Vec::with_capacity(flat.len() / 2);
+        for pair in flat.chunks_exact(2) {
+            let u = pair[0].as_usize()?;
+            let w = pair[1].as_usize()?;
+            if u > VertexId::MAX as usize || w > VertexId::MAX as usize {
+                bail!("checkpoint edge ({u}, {w}) exceeds vertex id range");
+            }
+            edges.push((u as VertexId, w as VertexId));
+        }
+        let ranks = match v.get("ranks")? {
+            Value::Null => None,
+            Value::Arr(a) => {
+                let mut r = Vec::with_capacity(a.len());
+                for x in a {
+                    r.push(x.as_f64()?);
+                }
+                Some(r)
+            }
+            _ => bail!("checkpoint ranks must be an array or null"),
+        };
+        let mut metrics = Metrics::default();
+        let k = v.get("counters")?;
+        metrics.updates_applied = k.get("updates_applied")?.as_usize()?;
+        metrics.edges_inserted = k.get("edges_inserted")?.as_usize()?;
+        metrics.edges_deleted = k.get("edges_deleted")?.as_usize()?;
+        metrics.device_runs = k.get("device_runs")?.as_usize()?;
+        metrics.native_fallbacks = k.get("native_fallbacks")?.as_usize()?;
+        metrics.quarantined_edits = k.get("quarantined_edits")?.as_usize()?;
+        metrics.watchdog_trips = k.get("watchdog_trips")?.as_usize()?;
+        metrics.health_recoveries = k.get("health_recoveries")?.as_usize()?;
+        metrics.restores = k.get("restores")?.as_usize()?;
+
+        let cp = Checkpoint { seq, num_vertices, edges, ranks, cfg, metrics };
+        cp.validate()?;
+        Ok(cp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut metrics = Metrics::default();
+        metrics.record_update(3, 1);
+        metrics.record_quarantined(2);
+        metrics.record_watchdog_trip();
+        Checkpoint {
+            seq: 7,
+            num_vertices: 3,
+            edges: vec![(0, 1), (1, 2), (0, 0), (1, 1), (2, 2)],
+            ranks: Some(vec![0.25, 0.5, 0.25]),
+            cfg: PagerankConfig::default().with_threads(2),
+            metrics,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let cp = sample();
+        let back = Checkpoint::from_json(&cp.to_json()).unwrap();
+        assert_eq!(back.seq, 7);
+        assert_eq!(back.num_vertices, 3);
+        assert_eq!(back.edges, cp.edges);
+        assert_eq!(back.cfg, cp.cfg);
+        let (a, b) = (back.ranks.unwrap(), cp.ranks.unwrap());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "bit-exact rank roundtrip");
+        }
+        assert_eq!(back.metrics.updates_applied, 1);
+        assert_eq!(back.metrics.quarantined_edits, 2);
+        assert_eq!(back.metrics.watchdog_trips, 1);
+    }
+
+    #[test]
+    fn roundtrip_preserves_awkward_floats() {
+        let mut cp = sample();
+        cp.ranks = Some(vec![1.0 / 3.0, 1e-17 + 0.5, 0.5 - 1e-17 - 1.0 / 3.0]);
+        // not mass-1: widen via no ranks validation path — keep mass valid
+        let s: f64 = cp.ranks.as_ref().unwrap().iter().sum();
+        cp.ranks.as_mut().unwrap()[0] += 1.0 - s;
+        let back = Checkpoint::from_json(&cp.to_json()).unwrap();
+        for (x, y) in back.ranks.unwrap().iter().zip(cp.ranks.as_ref().unwrap()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn none_ranks_roundtrip() {
+        let mut cp = sample();
+        cp.ranks = None;
+        let back = Checkpoint::from_json(&cp.to_json()).unwrap();
+        assert!(back.ranks.is_none());
+    }
+
+    #[test]
+    fn poisoned_checkpoints_are_rejected() {
+        // NaN rank
+        let mut cp = sample();
+        cp.ranks.as_mut().unwrap()[0] = f64::NAN;
+        assert!(cp.validate().is_err());
+        // out-of-range edge
+        let mut cp = sample();
+        cp.edges.push((9, 0));
+        assert!(cp.validate().is_err());
+        // wrong-length ranks
+        let mut cp = sample();
+        cp.ranks.as_mut().unwrap().push(0.0);
+        assert!(cp.validate().is_err());
+        // mass drift
+        let mut cp = sample();
+        cp.ranks = Some(vec![1.0, 1.0, 1.0]);
+        assert!(cp.validate().is_err());
+        // garbage document
+        assert!(Checkpoint::from_json("{\"format\":1").is_err());
+        assert!(Checkpoint::from_json("{\"format\":2}").is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! Deterministic fault injection for the robustness suite.
+//!
+//! A [`FaultPlan`] schedules faults against the coordinator's update
+//! sequence numbers: poisoning ranks with NaNs, forcing an iteration-cap
+//! stall, appending malformed edits to an incoming batch, or killing the
+//! coordinator thread mid-stream. Everything is derived from a seed via
+//! [`crate::util::Rng`], so a failing run replays bit-for-bit.
+//!
+//! The plan is armed on a service with
+//! [`super::DynamicGraphService::arm_faults`]; each scheduled fault fires
+//! exactly once, at the start (kill / malformed batch) or engine boundary
+//! (corruption / stall) of the matching `apply_update` call. The tests in
+//! `tests/robustness.rs` assert that every fault is detected by the
+//! validation pass, the watchdog or the supervisor — and that the service
+//! recovers.
+
+use std::collections::BTreeMap;
+
+use crate::batch::BatchUpdate;
+use crate::graph::VertexId;
+use crate::util::Rng;
+
+/// One injectable fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Overwrite `nans` randomly-chosen ranks with NaN after the engine run
+    /// (models a device memory fault / kernel bug).
+    CorruptRanks { nans: usize },
+    /// Report the run as having hit the iteration cap (models
+    /// non-convergence on a pathological graph).
+    Stall,
+    /// Append `edits` malformed edits (out-of-range ids, phantom deletions,
+    /// self-loops) to the incoming batch (models a buggy or hostile client).
+    MalformedBatch { edits: usize },
+    /// Panic inside `apply_update` (models a wedged/crashed coordinator;
+    /// the server supervisor must respawn from the last checkpoint).
+    KillCoordinator,
+}
+
+impl Fault {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Fault::CorruptRanks { .. } => "corrupt-ranks",
+            Fault::Stall => "stall",
+            Fault::MalformedBatch { .. } => "malformed-batch",
+            Fault::KillCoordinator => "kill-coordinator",
+        }
+    }
+}
+
+/// A seeded schedule of faults keyed by update sequence number.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    schedule: BTreeMap<u64, Fault>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, schedule: BTreeMap::new() }
+    }
+
+    /// Schedule `fault` to fire on the `update_seq`-th `apply_update` call
+    /// (0-based; the initial static computation is seq 0).
+    pub fn at(mut self, update_seq: u64, fault: Fault) -> Self {
+        self.schedule.insert(update_seq, fault);
+        self
+    }
+
+    /// Faults not yet fired.
+    pub fn pending(&self) -> usize {
+        self.schedule.len()
+    }
+
+    /// Remove and return the fault scheduled for `seq`, if any.
+    pub fn take(&mut self, seq: u64) -> Option<Fault> {
+        self.schedule.remove(&seq)
+    }
+
+    /// Per-(seed, seq) RNG so each fault's randomness is reproducible
+    /// regardless of what fired before it.
+    fn rng(&self, seq: u64) -> Rng {
+        Rng::seed_from_u64(self.seed ^ seq.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// Poison `nans` distinct positions of `ranks` with NaN.
+    pub fn corrupt_ranks(&self, seq: u64, nans: usize, ranks: &mut [f64]) {
+        if ranks.is_empty() {
+            return;
+        }
+        let mut rng = self.rng(seq);
+        for i in rng.sample_indices(ranks.len(), nans.max(1)) {
+            ranks[i] = f64::NAN;
+        }
+    }
+
+    /// Deterministic malformed edits against a graph of `num_vertices`
+    /// vertices: cycles through out-of-range insertions, phantom deletions
+    /// of a (hopefully absent) far-apart pair, and self-loop edits.
+    pub fn malformed_edits(&self, seq: u64, num_vertices: usize, edits: usize) -> BatchUpdate {
+        let mut rng = self.rng(seq);
+        let n = num_vertices as u64;
+        let mut b = BatchUpdate::default();
+        for i in 0..edits {
+            match i % 3 {
+                0 => {
+                    // out of range: id in [n, 2n)
+                    let u = rng.gen_range_u64(n, 2 * n.max(1)) as VertexId;
+                    let v = rng.gen_range_u64(0, n.max(1)) as VertexId;
+                    b.insertions.push((u, v));
+                }
+                1 => {
+                    // phantom deletion (validated against the live graph;
+                    // classified out-of-range if n < 2)
+                    let u = rng.gen_range_u64(0, n.max(1)) as VertexId;
+                    b.deletions.push((u, u.wrapping_add(1) % n.max(1) as VertexId));
+                }
+                _ => {
+                    let u = rng.gen_range_u64(0, n.max(1)) as VertexId;
+                    b.insertions.push((u, u)); // self-loop
+                }
+            }
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_fires_once() {
+        let mut p = FaultPlan::new(1)
+            .at(2, Fault::Stall)
+            .at(5, Fault::KillCoordinator);
+        assert_eq!(p.pending(), 2);
+        assert_eq!(p.take(0), None);
+        assert_eq!(p.take(2), Some(Fault::Stall));
+        assert_eq!(p.take(2), None, "consumed");
+        assert_eq!(p.take(5), Some(Fault::KillCoordinator));
+        assert_eq!(p.pending(), 0);
+    }
+
+    #[test]
+    fn corruption_is_deterministic_per_seed_and_seq() {
+        let p = FaultPlan::new(42);
+        let mut a = vec![0.1; 50];
+        let mut b = vec![0.1; 50];
+        p.corrupt_ranks(3, 5, &mut a);
+        p.corrupt_ranks(3, 5, &mut b);
+        let nan_at = |r: &[f64]| -> Vec<usize> {
+            r.iter().enumerate().filter(|(_, x)| x.is_nan()).map(|(i, _)| i).collect()
+        };
+        assert_eq!(nan_at(&a), nan_at(&b));
+        assert_eq!(nan_at(&a).len(), 5);
+        let mut c = vec![0.1; 50];
+        p.corrupt_ranks(4, 5, &mut c);
+        assert_ne!(nan_at(&a), nan_at(&c), "different seq, different positions");
+    }
+
+    #[test]
+    fn malformed_edits_are_actually_malformed() {
+        let p = FaultPlan::new(9);
+        let b = p.malformed_edits(1, 100, 9);
+        assert_eq!(b.len(), 9);
+        let out_of_range = b
+            .insertions
+            .iter()
+            .filter(|&&(u, _)| u >= 100)
+            .count();
+        let self_loops = b.insertions.iter().filter(|&&(u, v)| u == v && u < 100).count();
+        assert!(out_of_range >= 3, "{b:?}");
+        assert!(self_loops >= 3, "{b:?}");
+        assert_eq!(b.deletions.len(), 3);
+        // deterministic
+        assert_eq!(p.malformed_edits(1, 100, 9), b);
+    }
+}

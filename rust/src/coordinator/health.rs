@@ -1,0 +1,197 @@
+//! Rank-health watchdog: after every engine run the coordinator checks the
+//! returned ranks before installing them. PageRank invariants are cheap to
+//! verify — every rank is finite and non-negative, the total rank mass is 1
+//! (the iteration is a stochastic-matrix fixpoint), and the run converged
+//! under its iteration cap — and a violation means the result is garbage
+//! (device fault, kernel bug, poisoned warm-start state, injected fault).
+//!
+//! A tripped check never crashes the service and never serves the bad
+//! vector: the coordinator keeps answering from the last-known-good ranks
+//! and escalates through the degradation ladder (DF-P → ND → full Static
+//! refresh, see [`super::policy`]) until a healthy result is produced.
+
+use std::fmt;
+
+use crate::engines::config::PagerankConfig;
+
+/// Watchdog thresholds.
+#[derive(Debug, Clone, Copy)]
+pub struct HealthConfig {
+    /// Allowed |Σr − 1| drift. DF-P deliberately trades accuracy for speed
+    /// (paper Section 5.3), so the default is looser than τ but far tighter
+    /// than the policy's 1e-3 error guard.
+    pub mass_tolerance: f64,
+    /// Flag runs that hit the iteration cap without converging.
+    pub check_convergence: bool,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self { mass_tolerance: 1e-4, check_convergence: true }
+    }
+}
+
+/// One tripped invariant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HealthViolation {
+    /// NaN or ±Inf ranks.
+    NonFinite { count: usize },
+    /// Strictly negative ranks (impossible under Eq. 1).
+    Negative { count: usize },
+    /// |Σr − 1| beyond [`HealthConfig::mass_tolerance`].
+    MassDrift { mass: f64 },
+    /// The run used every allowed iteration without reaching τ.
+    NonConvergence { iterations: usize },
+    /// The engine returned a vector of the wrong length.
+    WrongLength { got: usize, want: usize },
+}
+
+impl fmt::Display for HealthViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HealthViolation::NonFinite { count } => {
+                write!(f, "{count} non-finite rank(s)")
+            }
+            HealthViolation::Negative { count } => {
+                write!(f, "{count} negative rank(s)")
+            }
+            HealthViolation::MassDrift { mass } => {
+                write!(f, "rank mass {mass} drifted from 1")
+            }
+            HealthViolation::NonConvergence { iterations } => {
+                write!(f, "no convergence after {iterations} iterations")
+            }
+            HealthViolation::WrongLength { got, want } => {
+                write!(f, "rank vector has {got} entries, graph has {want}")
+            }
+        }
+    }
+}
+
+/// All violations from one check, as a typed error (`?`-converts to
+/// `anyhow::Error`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthError(pub Vec<HealthViolation>);
+
+impl fmt::Display for HealthError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rank health check failed: ")?;
+        for (i, v) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, "; ")?;
+            }
+            write!(f, "{v}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for HealthError {}
+
+/// Check one engine result against the watchdog invariants. Returns every
+/// violation found (empty = healthy). `iterations` is the number the engine
+/// actually ran; `num_vertices` the size the vector must have.
+pub fn check_ranks(
+    ranks: &[f64],
+    num_vertices: usize,
+    iterations: usize,
+    cfg: &PagerankConfig,
+    hc: &HealthConfig,
+) -> Vec<HealthViolation> {
+    let mut out = Vec::new();
+    if ranks.len() != num_vertices {
+        out.push(HealthViolation::WrongLength { got: ranks.len(), want: num_vertices });
+        return out; // nothing else is meaningful on a wrong-shape vector
+    }
+    let mut non_finite = 0usize;
+    let mut negative = 0usize;
+    let mut mass = 0.0f64;
+    for &r in ranks {
+        if !r.is_finite() {
+            non_finite += 1;
+        } else if r < 0.0 {
+            negative += 1;
+        }
+        mass += r;
+    }
+    if non_finite > 0 {
+        out.push(HealthViolation::NonFinite { count: non_finite });
+    }
+    if negative > 0 {
+        out.push(HealthViolation::Negative { count: negative });
+    }
+    // only meaningful when every summand was finite (otherwise NonFinite
+    // already covers it); a sum that overflowed still exceeds the tolerance
+    if non_finite == 0 && (mass - 1.0).abs() > hc.mass_tolerance {
+        out.push(HealthViolation::MassDrift { mass });
+    }
+    if hc.check_convergence && iterations >= cfg.max_iterations {
+        out.push(HealthViolation::NonConvergence { iterations });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PagerankConfig {
+        PagerankConfig::default()
+    }
+
+    #[test]
+    fn healthy_ranks_pass() {
+        let r = vec![0.25; 4];
+        assert!(check_ranks(&r, 4, 30, &cfg(), &HealthConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn nan_and_inf_detected() {
+        let r = vec![0.25, f64::NAN, 0.25, f64::INFINITY];
+        let v = check_ranks(&r, 4, 30, &cfg(), &HealthConfig::default());
+        assert!(v.contains(&HealthViolation::NonFinite { count: 2 }), "{v:?}");
+    }
+
+    #[test]
+    fn negative_detected() {
+        let r = vec![0.6, -0.1, 0.5];
+        let v = check_ranks(&r, 3, 30, &cfg(), &HealthConfig::default());
+        assert!(v.contains(&HealthViolation::Negative { count: 1 }), "{v:?}");
+    }
+
+    #[test]
+    fn mass_drift_detected() {
+        let r = vec![0.5; 4]; // mass 2.0
+        let v = check_ranks(&r, 4, 30, &cfg(), &HealthConfig::default());
+        assert!(matches!(v[0], HealthViolation::MassDrift { mass } if (mass - 2.0).abs() < 1e-12));
+        // within tolerance passes
+        let hc = HealthConfig { mass_tolerance: 1.5, ..Default::default() };
+        assert!(check_ranks(&r, 4, 30, &cfg(), &hc).is_empty());
+    }
+
+    #[test]
+    fn iteration_cap_detected_and_optional() {
+        let r = vec![0.25; 4];
+        let v = check_ranks(&r, 4, 500, &cfg(), &HealthConfig::default());
+        assert_eq!(v, vec![HealthViolation::NonConvergence { iterations: 500 }]);
+        let hc = HealthConfig { check_convergence: false, ..Default::default() };
+        assert!(check_ranks(&r, 4, 500, &cfg(), &hc).is_empty());
+    }
+
+    #[test]
+    fn wrong_length_short_circuits() {
+        let r = vec![f64::NAN; 3];
+        let v = check_ranks(&r, 4, 30, &cfg(), &HealthConfig::default());
+        assert_eq!(v, vec![HealthViolation::WrongLength { got: 3, want: 4 }]);
+    }
+
+    #[test]
+    fn error_formats_all_violations() {
+        let e = HealthError(vec![
+            HealthViolation::NonFinite { count: 2 },
+            HealthViolation::MassDrift { mass: f64::NAN },
+        ]);
+        let s = e.to_string();
+        assert!(s.contains("non-finite") && s.contains("drifted"), "{s}");
+    }
+}

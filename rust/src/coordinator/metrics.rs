@@ -31,7 +31,8 @@ impl ApproachStats {
     }
 }
 
-/// Coordinator-wide counters.
+/// Coordinator-wide counters: throughput plus the robustness-layer health
+/// signals (quarantined edits, watchdog trips, recoveries, restores).
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub updates_applied: usize,
@@ -39,6 +40,14 @@ pub struct Metrics {
     pub edges_deleted: usize,
     pub device_runs: usize,
     pub native_fallbacks: usize,
+    /// Edits rejected by `batch::validate` instead of applied.
+    pub quarantined_edits: usize,
+    /// Engine results the rank-health watchdog refused to install.
+    pub watchdog_trips: usize,
+    /// Updates that succeeded only after escalating the degradation ladder.
+    pub health_recoveries: usize,
+    /// Times this service was rebuilt from a checkpoint.
+    pub restores: usize,
     pub per_approach: HashMap<Approach, ApproachStats>,
 }
 
@@ -47,6 +56,22 @@ impl Metrics {
         self.updates_applied += 1;
         self.edges_inserted += inserted;
         self.edges_deleted += deleted;
+    }
+
+    pub fn record_quarantined(&mut self, edits: usize) {
+        self.quarantined_edits += edits;
+    }
+
+    pub fn record_watchdog_trip(&mut self) {
+        self.watchdog_trips += 1;
+    }
+
+    pub fn record_recovery(&mut self) {
+        self.health_recoveries += 1;
+    }
+
+    pub fn record_restore(&mut self) {
+        self.restores += 1;
     }
 
     pub fn record_run(
@@ -64,7 +89,8 @@ impl Metrics {
         self.per_approach.entry(approach).or_default().record(elapsed, iterations);
     }
 
-    /// One-line summary for logs.
+    /// One-line summary for logs: throughput, then health, then
+    /// per-approach latency.
     pub fn summary(&self) -> String {
         let mut parts = vec![format!(
             "updates={} (+{} -{}) device_runs={} native_fallbacks={}",
@@ -74,6 +100,13 @@ impl Metrics {
             self.device_runs,
             self.native_fallbacks
         )];
+        parts.push(format!(
+            "health: quarantined={} watchdog_trips={} recoveries={} restores={}",
+            self.quarantined_edits,
+            self.watchdog_trips,
+            self.health_recoveries,
+            self.restores
+        ));
         let mut keys: Vec<_> = self.per_approach.keys().copied().collect();
         keys.sort_by_key(|a| a.label());
         for a in keys {
@@ -108,5 +141,22 @@ mod tests {
         assert_eq!(s.runs, 2);
         assert_eq!(s.mean_time(), Duration::from_millis(3));
         assert!(m.summary().contains("DF-P"));
+    }
+
+    #[test]
+    fn summary_surfaces_health_counters() {
+        let mut m = Metrics::default();
+        m.record_quarantined(4);
+        m.record_watchdog_trip();
+        m.record_watchdog_trip();
+        m.record_recovery();
+        m.record_restore();
+        assert_eq!(m.quarantined_edits, 4);
+        assert_eq!(m.watchdog_trips, 2);
+        let s = m.summary();
+        assert!(s.contains("quarantined=4"), "{s}");
+        assert!(s.contains("watchdog_trips=2"), "{s}");
+        assert!(s.contains("recoveries=1"), "{s}");
+        assert!(s.contains("restores=1"), "{s}");
     }
 }

@@ -4,7 +4,34 @@
 //!
 //! This is the L3 "serving" layer: Python never runs here — the device path
 //! executes pre-compiled HLO artifacts via PJRT.
+//!
+//! # Robustness layer
+//!
+//! The coordinator trusts nothing it is handed:
+//!
+//! * **Validated ingestion** — every batch goes through
+//!   [`crate::batch::validate`] first; malformed edits (out-of-range ids,
+//!   duplicate insertions, phantom deletions, self-loops) are quarantined
+//!   and reported in the [`UpdateReport`], the clean subset is applied.
+//! * **Rank-health watchdog** — every engine result is checked
+//!   ([`health::check_ranks`]) for NaN/Inf/negative ranks, rank-mass drift
+//!   and iteration-cap stalls before it is installed. A bad result is never
+//!   served: the coordinator escalates the degradation ladder
+//!   (DF-P → ND → full Static, [`ApproachPolicy::escalate`]) within the
+//!   same update and keeps the last-known-good ranks until a healthy
+//!   result lands.
+//! * **Checkpoint/restore** — [`DynamicGraphService::checkpoint`] snapshots
+//!   (edge list, ranks, metrics, config); [`DynamicGraphService::restore`]
+//!   rebuilds a warm service from it (the [`server`] supervisor uses this
+//!   to respawn a panicked coordinator thread).
+//! * **Fault injection** — a seeded [`FaultPlan`] drives the deterministic
+//!   robustness suite (`tests/robustness.rs`).
+//!
+//! No public method of this type panics, even on poisoned inputs.
 
+pub mod checkpoint;
+pub mod faults;
+pub mod health;
 pub mod metrics;
 pub mod policy;
 pub mod server;
@@ -12,17 +39,20 @@ pub mod server;
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::batch::{self, BatchUpdate};
+use crate::batch::{self, BatchUpdate, Rejection};
 use crate::engines::config::PagerankConfig;
 use crate::engines::device::DeviceEngine;
 use crate::engines::{native, Approach, PagerankResult};
 use crate::graph::{CsrGraph, GraphBuilder, VertexId};
 use crate::runtime::ArtifactStore;
 
+pub use checkpoint::Checkpoint;
+pub use faults::{Fault, FaultPlan};
+pub use health::{HealthConfig, HealthError, HealthViolation};
 pub use metrics::Metrics;
-pub use policy::{ApproachPolicy, PolicyConfig};
+pub use policy::{ApproachPolicy, HealthState, PolicyConfig};
 
 /// What happened when a batch was applied.
 #[derive(Debug, Clone)]
@@ -35,6 +65,15 @@ pub struct UpdateReport {
     pub num_vertices: usize,
     pub num_edges: usize,
     pub edges_changed: usize,
+    /// Edits rejected by validation instead of applied.
+    pub quarantined: usize,
+    /// The per-edit quarantine diagnoses.
+    pub rejections: Vec<Rejection>,
+    /// Engine results the watchdog rejected while serving this update.
+    pub watchdog_trips: usize,
+    /// Whether the policy is in degraded (conservative) mode after this
+    /// update.
+    pub degraded: bool,
 }
 
 /// The coordinator service. Single-writer: wrap in the [`server`] loop for
@@ -48,11 +87,17 @@ pub struct DynamicGraphService {
     pub cfg: PagerankConfig,
     pub policy: ApproachPolicy,
     pub metrics: Metrics,
+    /// Watchdog thresholds.
+    pub health: HealthConfig,
+    faults: Option<FaultPlan>,
+    update_seq: u64,
 }
 
 impl DynamicGraphService {
     /// Create from an initial graph. `store` enables the device engine
-    /// (falls back to native for graphs beyond the largest tier).
+    /// (falls back to native for graphs beyond the largest tier). The
+    /// config is sanitized ([`PagerankConfig::sanitized`]) so an invalid
+    /// field can never wedge or crash an engine run.
     pub fn new(
         mut builder: GraphBuilder,
         store: Option<Arc<ArtifactStore>>,
@@ -65,10 +110,69 @@ impl DynamicGraphService {
             prev_csr,
             ranks: None,
             store,
-            cfg,
+            cfg: cfg.sanitized(),
             policy: ApproachPolicy::default(),
             metrics: Metrics::default(),
+            health: HealthConfig::default(),
+            faults: None,
+            update_seq: 0,
         }
+    }
+
+    /// Rebuild a warm service from a checkpoint (edge list, ranks, metrics,
+    /// config). The checkpoint is validated first: a poisoned snapshot is a
+    /// typed error, not a corrupted service. `store` may be `None` — a
+    /// supervisor respawning after a panic serves from the native engines
+    /// until a store can be re-attached.
+    pub fn restore(cp: &Checkpoint, store: Option<Arc<ArtifactStore>>) -> Result<Self> {
+        cp.validate()?;
+        let mut builder = GraphBuilder::new(cp.num_vertices);
+        for &(u, v) in &cp.edges {
+            builder.insert_edge(u, v);
+        }
+        builder.ensure_self_loops();
+        let prev_csr = builder.to_csr();
+        let mut metrics = cp.metrics.clone();
+        metrics.record_restore();
+        Ok(Self {
+            builder,
+            prev_csr,
+            ranks: cp.ranks.clone(),
+            store,
+            cfg: cp.cfg.sanitized(),
+            policy: ApproachPolicy::default(),
+            metrics,
+            health: HealthConfig::default(),
+            faults: None,
+            update_seq: cp.seq,
+        })
+    }
+
+    /// Snapshot the current state for later [`restore`](Self::restore).
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            seq: self.update_seq,
+            num_vertices: self.builder.num_vertices(),
+            edges: self.builder.edges().collect(),
+            ranks: self.ranks.clone(),
+            cfg: self.cfg,
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    /// Arm a deterministic fault-injection plan (robustness tests).
+    pub fn arm_faults(&mut self, plan: FaultPlan) {
+        self.faults = Some(plan);
+    }
+
+    /// Monotone count of `apply_update` calls (checkpoint sequence).
+    pub fn update_seq(&self) -> u64 {
+        self.update_seq
+    }
+
+    /// Whether the watchdog has degraded the policy to conservative mode.
+    pub fn degraded(&self) -> bool {
+        self.policy.health() == HealthState::Degraded
     }
 
     pub fn num_vertices(&self) -> usize {
@@ -84,11 +188,14 @@ impl DynamicGraphService {
     }
 
     /// Top-k vertices by rank (requires at least one computation).
+    /// Total-order comparison: a poisoned rank vector can never panic the
+    /// read path (NaNs sort ahead of finite ranks, which the watchdog
+    /// prevents from being installed in the first place).
     pub fn top_k(&self, k: usize) -> Vec<(VertexId, f64)> {
         let Some(r) = &self.ranks else { return Vec::new() };
         let mut idx: Vec<VertexId> = (0..r.len() as VertexId).collect();
         idx.sort_unstable_by(|&a, &b| {
-            r[b as usize].partial_cmp(&r[a as usize]).unwrap()
+            r[b as usize].total_cmp(&r[a as usize])
         });
         idx.into_iter().take(k).map(|v| (v, r[v as usize])).collect()
     }
@@ -103,6 +210,9 @@ impl DynamicGraphService {
         batch: &BatchUpdate,
     ) -> Result<(PagerankResult, bool)> {
         let prev = self.ranks.as_deref();
+        let need_prev = |label: &str| {
+            prev.ok_or_else(|| anyhow!("{label} requires previous ranks"))
+        };
         if let Some(store) = &self.store {
             if store.tier_for(g.num_vertices(), g.num_edges()).is_some() {
                 let dg = store.pack_graph(g, gt)?;
@@ -122,21 +232,21 @@ impl DynamicGraphService {
         let res = match approach {
             Approach::Static => native::static_pagerank(g, gt, &self.cfg, None),
             Approach::NaiveDynamic => {
-                native::naive_dynamic(g, gt, &self.cfg, prev.expect("ND needs ranks"))
+                native::naive_dynamic(g, gt, &self.cfg, need_prev("ND")?)
             }
             Approach::DynamicTraversal => native::dynamic::dynamic_traversal(
                 g,
                 gt,
                 &self.prev_csr,
                 &self.cfg,
-                prev.expect("DT needs ranks"),
+                need_prev("DT")?,
                 batch,
             ),
             Approach::DynamicFrontier => native::dynamic::dynamic_frontier(
                 g,
                 gt,
                 &self.cfg,
-                prev.expect("DF needs ranks"),
+                need_prev("DF")?,
                 batch,
                 false,
             ),
@@ -144,7 +254,7 @@ impl DynamicGraphService {
                 g,
                 gt,
                 &self.cfg,
-                prev.expect("DF-P needs ranks"),
+                need_prev("DF-P")?,
                 batch,
                 true,
             ),
@@ -165,6 +275,10 @@ impl DynamicGraphService {
                 num_vertices: g.num_vertices(),
                 num_edges: g.num_edges(),
                 edges_changed: 0,
+                quarantined: 0,
+                rejections: Vec::new(),
+                watchdog_trips: 0,
+                degraded: self.degraded(),
             });
         }
         self.apply_update(BatchUpdate::default())
@@ -173,17 +287,94 @@ impl DynamicGraphService {
     /// Apply a batch update and refresh ranks with the policy-chosen
     /// approach. An empty batch on a fresh service triggers the initial
     /// Static computation.
+    ///
+    /// The batch is validated first (malformed edits quarantined, clean
+    /// subset applied) and the resulting ranks are health-checked before
+    /// installation; on a watchdog trip the degradation ladder re-runs with
+    /// a more conservative approach. On any error the last-known-good ranks
+    /// stay installed and keep being served.
     pub fn apply_update(&mut self, batch: BatchUpdate) -> Result<UpdateReport> {
+        let seq = self.update_seq;
+        self.update_seq += 1;
+
+        // Deterministic fault injection (armed only by the robustness
+        // harness; None in production).
+        let mut batch = batch;
+        let mut result_fault: Option<Fault> = None;
+        if let Some(plan) = &mut self.faults {
+            match plan.take(seq) {
+                Some(Fault::KillCoordinator) => {
+                    panic!("injected fault: coordinator killed at update {seq}")
+                }
+                Some(Fault::MalformedBatch { edits }) => {
+                    let junk =
+                        plan.malformed_edits(seq, self.builder.num_vertices(), edits);
+                    batch.deletions.extend(junk.deletions);
+                    batch.insertions.extend(junk.insertions);
+                }
+                Some(f) => result_fault = Some(f),
+                None => {}
+            }
+        }
+
+        // Validated ingestion: quarantine instead of corrupting the CSR.
+        let validated = batch::validate(&self.builder, &batch);
+        let quarantined = validated.quarantined();
+        self.metrics.record_quarantined(quarantined);
+        let clean = validated.clean;
+        let rejections = validated.rejections;
+
         let old_csr = self.builder.to_csr();
-        let edges_changed = batch::apply(&mut self.builder, &batch);
+        let edges_changed = batch::apply(&mut self.builder, &clean);
         let g = self.builder.to_csr();
         let gt = g.transpose();
 
-        let approach =
-            self.policy.choose(batch.len(), g.num_edges(), self.ranks.is_some());
-        let (res, on_device) = self.run(approach, &g, &gt, &batch)?;
+        let mut approach =
+            self.policy.choose(clean.len(), g.num_edges(), self.ranks.is_some());
+        let mut trips = 0usize;
+        // Degradation ladder: re-run with a more conservative approach until
+        // the watchdog accepts the result (at most 3 runs: DF-P → ND →
+        // Static). The last-known-good ranks in `self.ranks` are untouched
+        // until a healthy result breaks the loop.
+        let (res, on_device, approach) = loop {
+            let (mut res, on_device) = self.run(approach, &g, &gt, &clean)?;
+            if let Some(fault) = result_fault.take() {
+                match fault {
+                    Fault::CorruptRanks { nans } => {
+                        if let Some(plan) = &self.faults {
+                            plan.corrupt_ranks(seq, nans, &mut res.ranks);
+                        }
+                    }
+                    Fault::Stall => res.iterations = self.cfg.max_iterations,
+                    _ => {}
+                }
+            }
+            let violations = health::check_ranks(
+                &res.ranks,
+                g.num_vertices(),
+                res.iterations,
+                &self.cfg,
+                &self.health,
+            );
+            if violations.is_empty() {
+                break (res, on_device, approach);
+            }
+            trips += 1;
+            self.metrics.record_watchdog_trip();
+            match self.policy.escalate(approach) {
+                Some(next) => approach = next,
+                None => {
+                    // Even a full Static recompute failed the health check:
+                    // nothing safe to install; keep serving last-known-good.
+                    return Err(HealthError(violations).into());
+                }
+            }
+        };
+        if trips > 0 {
+            self.metrics.record_recovery();
+        }
 
-        self.metrics.record_update(batch.insertions.len(), batch.deletions.len());
+        self.metrics.record_update(clean.insertions.len(), clean.deletions.len());
         self.metrics.record_run(approach, res.elapsed, res.iterations, on_device);
 
         let report = UpdateReport {
@@ -195,6 +386,10 @@ impl DynamicGraphService {
             num_vertices: g.num_vertices(),
             num_edges: g.num_edges(),
             edges_changed,
+            quarantined,
+            rejections,
+            watchdog_trips: trips,
+            degraded: self.degraded(),
         };
         self.ranks = Some(res.ranks);
         self.prev_csr = old_csr;
@@ -202,11 +397,24 @@ impl DynamicGraphService {
     }
 
     /// Force a full static recomputation (periodic refresh; also resets the
-    /// policy's error guard).
+    /// policy's error guard and health degradation). The result is
+    /// health-checked like any other: a failed refresh keeps the
+    /// last-known-good ranks and the degraded policy state.
     pub fn refresh_static(&mut self) -> Result<UpdateReport> {
         let g = self.builder.to_csr();
         let gt = g.transpose();
         let (res, on_device) = self.run(Approach::Static, &g, &gt, &BatchUpdate::default())?;
+        let violations = health::check_ranks(
+            &res.ranks,
+            g.num_vertices(),
+            res.iterations,
+            &self.cfg,
+            &self.health,
+        );
+        if !violations.is_empty() {
+            self.metrics.record_watchdog_trip();
+            return Err(HealthError(violations).into());
+        }
         self.metrics
             .record_run(Approach::Static, res.elapsed, res.iterations, on_device);
         self.policy.reset();
@@ -219,6 +427,10 @@ impl DynamicGraphService {
             num_vertices: g.num_vertices(),
             num_edges: g.num_edges(),
             edges_changed: 0,
+            quarantined: 0,
+            rejections: Vec::new(),
+            watchdog_trips: 0,
+            degraded: false,
         };
         self.ranks = Some(res.ranks);
         Ok(report)
@@ -251,6 +463,9 @@ mod tests {
         let r1 = s.apply_update(b).unwrap();
         assert_eq!(r1.approach, Approach::DynamicFrontierPruning);
         assert!(r1.initially_affected > 0);
+        assert_eq!(r1.quarantined, 0);
+        assert_eq!(r1.watchdog_trips, 0);
+        assert!(!r1.degraded);
     }
 
     #[test]
@@ -270,6 +485,21 @@ mod tests {
         let top = s.top_k(10);
         assert_eq!(top.len(), 10);
         assert!(top.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    #[test]
+    fn top_k_never_panics_on_poisoned_ranks() {
+        // the watchdog keeps NaN ranks from ever being installed, but the
+        // read path must not rely on that: poison directly and query
+        let mut s = service(50);
+        s.ensure_ranks().unwrap();
+        let n = s.num_vertices();
+        let mut poisoned = s.ranks().unwrap().to_vec();
+        poisoned[3] = f64::NAN;
+        poisoned[7] = f64::NEG_INFINITY;
+        s.ranks = Some(poisoned);
+        let top = s.top_k(n);
+        assert_eq!(top.len(), n, "total_cmp sorts NaN without panicking");
     }
 
     #[test]
@@ -301,5 +531,46 @@ mod tests {
         s.apply_update(b).unwrap();
         assert_eq!(s.metrics.updates_applied, 2);
         assert!(s.metrics.summary().contains("Static"));
+    }
+
+    #[test]
+    fn malformed_batch_is_quarantined_not_applied() {
+        let mut s = service(100);
+        s.ensure_ranks().unwrap();
+        let n = s.num_vertices() as VertexId;
+        let m0 = s.num_edges();
+        let b = BatchUpdate {
+            deletions: vec![(n, 0), (0, 0)],
+            insertions: vec![(n + 5, 1), (2, 2)],
+        };
+        let rep = s.apply_update(b).unwrap();
+        assert_eq!(rep.quarantined, 4);
+        assert_eq!(rep.edges_changed, 0);
+        assert_eq!(s.num_edges(), m0, "graph untouched by garbage");
+        assert_eq!(s.metrics.quarantined_edits, 4);
+        assert_eq!(rep.rejections.len(), 4);
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_warm() {
+        let mut s = service(200);
+        s.ensure_ranks().unwrap();
+        let b = batch::random_batch(&s.builder, 3, 0.8, 5);
+        s.apply_update(b).unwrap();
+
+        let cp = s.checkpoint();
+        assert_eq!(cp.seq, 2);
+        let mut r = DynamicGraphService::restore(&cp, None).unwrap();
+        assert_eq!(r.num_vertices(), s.num_vertices());
+        assert_eq!(r.num_edges(), s.num_edges());
+        assert_eq!(r.metrics.restores, 1);
+        assert_eq!(r.update_seq(), 2);
+        for (a, b) in r.ranks().unwrap().iter().zip(s.ranks().unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "warm ranks carried over");
+        }
+        // a restored service keeps updating
+        let b = batch::random_batch(&r.builder, 2, 0.8, 9);
+        let rep = r.apply_update(b).unwrap();
+        assert_ne!(rep.approach, Approach::Static, "warm restart, not cold");
     }
 }

@@ -1,12 +1,28 @@
 //! Approach selection policy — the paper's Section 5.3 recommendations as
-//! executable logic.
+//! executable logic, extended with the watchdog's degradation ladder.
 //!
 //! - real-world dynamic streams: DF-P by default; switch to ND if observed
 //!   error climbs above a guard band (Section 5.3.1);
 //! - large random batches: DF-P up to 1e-4·|E|, ND beyond (Section 5.3.2);
-//! - no previous ranks (first snapshot): Static.
+//! - no previous ranks (first snapshot): Static;
+//! - **health degradation**: when the rank-health watchdog rejects a
+//!   result, the coordinator walks the ladder DF-P/DF/DT → ND → full
+//!   Static refresh within the same update, and the policy stays in
+//!   [`HealthState::Degraded`] (conservative ND) until a successful static
+//!   refresh resets it.
 
 use crate::engines::Approach;
+
+/// Watchdog-driven policy state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HealthState {
+    /// No unresolved watchdog trips: approach chosen on speed alone.
+    #[default]
+    Healthy,
+    /// A recent result failed the health check: prefer ND (full-vertex
+    /// processing on warm ranks) until a static refresh clears the state.
+    Degraded,
+}
 
 /// Tunable policy thresholds.
 #[derive(Debug, Clone)]
@@ -24,16 +40,18 @@ impl Default for PolicyConfig {
     }
 }
 
-/// Stateful policy: remembers whether the error guard tripped.
+/// Stateful policy: remembers whether the error guard tripped and whether
+/// the watchdog degraded the service.
 #[derive(Debug, Clone, Default)]
 pub struct ApproachPolicy {
     pub config: PolicyConfig,
     error_tripped: bool,
+    health: HealthState,
 }
 
 impl ApproachPolicy {
     pub fn new(config: PolicyConfig) -> Self {
-        Self { config, error_tripped: false }
+        Self { config, error_tripped: false, health: HealthState::default() }
     }
 
     /// Choose the approach for a batch of `batch_len` edge updates against a
@@ -43,7 +61,7 @@ impl ApproachPolicy {
         if !has_previous {
             return Approach::Static;
         }
-        if self.error_tripped {
+        if self.error_tripped || self.health == HealthState::Degraded {
             return Approach::NaiveDynamic;
         }
         let frac = batch_len as f64 / num_edges.max(1) as f64;
@@ -52,6 +70,27 @@ impl ApproachPolicy {
         } else {
             Approach::DynamicFrontierPruning
         }
+    }
+
+    /// The next rung of the degradation ladder after `current` failed its
+    /// health check: incremental approaches fall back to ND (full-vertex
+    /// processing discards poisoned frontier state but keeps the warm
+    /// start), ND falls back to a full Static recompute, and a failed
+    /// Static run has nowhere left to go (`None`). Marks the policy
+    /// [`HealthState::Degraded`] as a side effect.
+    pub fn escalate(&mut self, current: Approach) -> Option<Approach> {
+        self.health = HealthState::Degraded;
+        match current {
+            Approach::DynamicFrontierPruning
+            | Approach::DynamicFrontier
+            | Approach::DynamicTraversal => Some(Approach::NaiveDynamic),
+            Approach::NaiveDynamic => Some(Approach::Static),
+            Approach::Static => None,
+        }
+    }
+
+    pub fn health(&self) -> HealthState {
+        self.health
     }
 
     /// Feed back an observed L1 error (from a calibration run against the
@@ -66,9 +105,11 @@ impl ApproachPolicy {
         self.error_tripped
     }
 
-    /// Reset the guard (e.g. after a periodic full static refresh).
+    /// Reset the error guard and health degradation (after a successful
+    /// full static refresh: fresh ranks carry no poisoned state).
     pub fn reset(&mut self) {
         self.error_tripped = false;
+        self.health = HealthState::Healthy;
     }
 }
 
@@ -98,6 +139,32 @@ mod tests {
         assert!(p.error_tripped());
         assert_eq!(p.choose(1, 1_000_000, true), Approach::NaiveDynamic);
         p.reset();
+        assert_eq!(p.choose(1, 1_000_000, true), Approach::DynamicFrontierPruning);
+    }
+
+    #[test]
+    fn degradation_ladder_walks_dfp_nd_static() {
+        let mut p = ApproachPolicy::default();
+        assert_eq!(p.health(), HealthState::Healthy);
+        assert_eq!(
+            p.escalate(Approach::DynamicFrontierPruning),
+            Some(Approach::NaiveDynamic)
+        );
+        assert_eq!(p.escalate(Approach::NaiveDynamic), Some(Approach::Static));
+        assert_eq!(p.escalate(Approach::Static), None, "ladder bottoms out");
+        assert_eq!(p.escalate(Approach::DynamicFrontier), Some(Approach::NaiveDynamic));
+        assert_eq!(p.escalate(Approach::DynamicTraversal), Some(Approach::NaiveDynamic));
+    }
+
+    #[test]
+    fn degraded_policy_prefers_nd_until_reset() {
+        let mut p = ApproachPolicy::default();
+        p.escalate(Approach::DynamicFrontierPruning);
+        assert_eq!(p.health(), HealthState::Degraded);
+        assert_eq!(p.choose(1, 1_000_000, true), Approach::NaiveDynamic);
+        assert_eq!(p.choose(1, 1_000_000, false), Approach::Static, "first snapshot wins");
+        p.reset();
+        assert_eq!(p.health(), HealthState::Healthy);
         assert_eq!(p.choose(1, 1_000_000, true), Approach::DynamicFrontierPruning);
     }
 }

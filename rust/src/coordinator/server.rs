@@ -1,108 +1,367 @@
 //! Request front-end for the coordinator.
 //!
 //! The service is single-writer (it owns the evolving graph), so requests
-//! are serialized through an mpsc channel into a dedicated thread (PJRT
-//! execution is synchronous); clients get a cheap cloneable
+//! are serialized through a **bounded** mpsc channel into a dedicated
+//! thread (PJRT execution is synchronous); clients get a cheap cloneable
 //! [`CoordinatorHandle`]. This is the "leader" loop of the L3 architecture:
 //! update producers and rank readers never touch the graph state directly.
+//!
+//! # Resilience
+//!
+//! * **Backpressure** — the queue is a `sync_channel` of
+//!   [`ServerConfig::queue_capacity`]; blocking methods wait, the
+//!   `*_with_deadline` variants return the typed
+//!   [`ServerError::Backpressure`] instead of queueing unboundedly.
+//! * **Deadlines** — `*_with_deadline` methods attach a deadline; a request
+//!   that expires in the queue is shed by the coordinator without doing the
+//!   work, and the client call returns [`ServerError::DeadlineExceeded`].
+//! * **Supervision** — the coordinator loop runs under `catch_unwind`; if
+//!   the service panics (device fault, injected kill), a supervisor
+//!   respawns it from the last checkpoint
+//!   ([`DynamicGraphService::restore`], store-less, so it serves from the
+//!   native engines) and keeps answering. Only the in-flight request is
+//!   lost ([`ServerError::Dropped`] — safe to retry).
+//! * **Checkpoints** — taken automatically every
+//!   [`ServerConfig::checkpoint_every`] updates (and on the first), and on
+//!   demand via [`CoordinatorHandle::checkpoint_now`].
 
-use std::sync::mpsc;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
-
-use super::{DynamicGraphService, UpdateReport};
+use super::{Checkpoint, DynamicGraphService, UpdateReport};
 use crate::batch::BatchUpdate;
 use crate::graph::VertexId;
 
+/// Typed failures of the serving front-end.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerError {
+    /// The bounded request queue is full; shed load or retry later.
+    Backpressure { capacity: usize },
+    /// The request missed its deadline (shed in-queue by the coordinator,
+    /// or timed out waiting for the response).
+    DeadlineExceeded,
+    /// The coordinator has shut down (all handles dropped, it could not be
+    /// built, or the respawn limit was exhausted).
+    Stopped,
+    /// The coordinator died while holding this request; a respawn is in
+    /// flight and the request is safe to retry.
+    Dropped,
+    /// The service executed the request and reported an error (e.g. an
+    /// unrecoverable health-check failure). Last-known-good ranks are still
+    /// being served.
+    Rejected(String),
+}
+
+impl fmt::Display for ServerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServerError::Backpressure { capacity } => {
+                write!(f, "request queue full ({capacity} slots)")
+            }
+            ServerError::DeadlineExceeded => write!(f, "request deadline exceeded"),
+            ServerError::Stopped => write!(f, "coordinator stopped"),
+            ServerError::Dropped => {
+                write!(f, "coordinator dropped request (respawn in flight; retry)")
+            }
+            ServerError::Rejected(msg) => write!(f, "request rejected: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServerError {}
+
+/// Front-end tunables.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bounded queue depth; senders beyond this block (or get
+    /// [`ServerError::Backpressure`] on the deadline paths).
+    pub queue_capacity: usize,
+    /// Checkpoint after every N successful updates.
+    pub checkpoint_every: u64,
+    /// Give up respawning after this many panics.
+    pub respawn_limit: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { queue_capacity: 64, checkpoint_every: 4, respawn_limit: 8 }
+    }
+}
+
 enum Request {
-    Update(BatchUpdate, mpsc::Sender<Result<UpdateReport>>),
+    Update(BatchUpdate, mpsc::Sender<Result<UpdateReport, ServerError>>),
     TopK(usize, mpsc::Sender<Vec<(VertexId, f64)>>),
     RanksOf(Vec<VertexId>, mpsc::Sender<Vec<f64>>),
     Stats(mpsc::Sender<String>),
-    RefreshStatic(mpsc::Sender<Result<UpdateReport>>),
+    RefreshStatic(mpsc::Sender<Result<UpdateReport, ServerError>>),
+    Checkpoint(mpsc::Sender<u64>),
 }
 
-/// Cloneable handle to a running coordinator. Methods block until the
-/// coordinator thread answers (requests are processed in FIFO order).
+struct Envelope {
+    deadline: Option<Instant>,
+    req: Request,
+}
+
+#[derive(Default)]
+struct Shared {
+    checkpoint: Mutex<Option<Checkpoint>>,
+    respawns: AtomicUsize,
+}
+
+impl Shared {
+    fn checkpoint_slot(&self) -> std::sync::MutexGuard<'_, Option<Checkpoint>> {
+        // a panic can never poison this lock meaningfully: the slot only
+        // ever holds complete, validated snapshots
+        self.checkpoint.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Cloneable handle to a running coordinator. Blocking methods wait for the
+/// coordinator (requests are processed in FIFO order); `*_with_deadline`
+/// variants bound both queueing and waiting with typed errors.
 #[derive(Clone)]
 pub struct CoordinatorHandle {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::SyncSender<Envelope>,
+    shared: Arc<Shared>,
+    capacity: usize,
 }
 
 impl CoordinatorHandle {
-    fn call<T>(&self, make: impl FnOnce(mpsc::Sender<T>) -> Request) -> Result<T> {
+    fn call<T>(
+        &self,
+        make: impl FnOnce(mpsc::Sender<T>) -> Request,
+    ) -> Result<T, ServerError> {
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(make(tx))
-            .map_err(|_| anyhow!("coordinator stopped"))?;
-        rx.recv().map_err(|_| anyhow!("coordinator dropped request"))
+        let env = Envelope { deadline: None, req: make(tx) };
+        self.tx.send(env).map_err(|_| ServerError::Stopped)?;
+        rx.recv().map_err(|_| ServerError::Dropped)
+    }
+
+    fn call_with_deadline<T>(
+        &self,
+        timeout: Duration,
+        make: impl FnOnce(mpsc::Sender<T>) -> Request,
+    ) -> Result<T, ServerError> {
+        let (tx, rx) = mpsc::channel();
+        let env = Envelope { deadline: Some(Instant::now() + timeout), req: make(tx) };
+        match self.tx.try_send(env) {
+            Ok(()) => {}
+            Err(mpsc::TrySendError::Full(_)) => {
+                return Err(ServerError::Backpressure { capacity: self.capacity })
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => return Err(ServerError::Stopped),
+        }
+        match rx.recv_timeout(timeout) {
+            Ok(v) => Ok(v),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ServerError::DeadlineExceeded),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServerError::Dropped),
+        }
     }
 
     /// Apply a batch update; returns once ranks are refreshed.
-    pub fn update(&self, batch: BatchUpdate) -> Result<UpdateReport> {
+    pub fn update(&self, batch: BatchUpdate) -> Result<UpdateReport, ServerError> {
         self.call(|tx| Request::Update(batch, tx))?
     }
 
+    /// Apply a batch update with a deadline: fails fast with
+    /// [`ServerError::Backpressure`] when the queue is full and
+    /// [`ServerError::DeadlineExceeded`] when the coordinator cannot answer
+    /// in time (expired requests are shed without being executed).
+    pub fn update_with_deadline(
+        &self,
+        batch: BatchUpdate,
+        timeout: Duration,
+    ) -> Result<UpdateReport, ServerError> {
+        self.call_with_deadline(timeout, |tx| Request::Update(batch, tx))?
+    }
+
     /// Highest-ranked vertices.
-    pub fn top_k(&self, k: usize) -> Result<Vec<(VertexId, f64)>> {
+    pub fn top_k(&self, k: usize) -> Result<Vec<(VertexId, f64)>, ServerError> {
         self.call(|tx| Request::TopK(k, tx))
     }
 
-    /// Ranks of specific vertices (0.0 if not yet computed).
-    pub fn ranks_of(&self, vertices: Vec<VertexId>) -> Result<Vec<f64>> {
+    /// Highest-ranked vertices, bounded wait.
+    pub fn top_k_with_deadline(
+        &self,
+        k: usize,
+        timeout: Duration,
+    ) -> Result<Vec<(VertexId, f64)>, ServerError> {
+        self.call_with_deadline(timeout, |tx| Request::TopK(k, tx))
+    }
+
+    /// Ranks of specific vertices (0.0 if not yet computed / out of range).
+    pub fn ranks_of(&self, vertices: Vec<VertexId>) -> Result<Vec<f64>, ServerError> {
         self.call(|tx| Request::RanksOf(vertices, tx))
     }
 
-    /// Metrics summary line.
-    pub fn stats(&self) -> Result<String> {
+    /// Metrics summary line (includes the health counters).
+    pub fn stats(&self) -> Result<String, ServerError> {
         self.call(Request::Stats)
     }
 
     /// Force a full static refresh.
-    pub fn refresh_static(&self) -> Result<UpdateReport> {
+    pub fn refresh_static(&self) -> Result<UpdateReport, ServerError> {
         self.call(Request::RefreshStatic)?
+    }
+
+    /// Take a checkpoint right now; returns its sequence number.
+    pub fn checkpoint_now(&self) -> Result<u64, ServerError> {
+        self.call(Request::Checkpoint)
+    }
+
+    /// The most recent checkpoint, if one has been taken.
+    pub fn last_checkpoint(&self) -> Option<Checkpoint> {
+        self.shared.checkpoint_slot().clone()
+    }
+
+    /// How many times the supervisor has respawned the coordinator.
+    pub fn respawns(&self) -> usize {
+        self.shared.respawns.load(Ordering::SeqCst)
     }
 }
 
-/// Spawn the coordinator loop on a dedicated thread; returns the handle.
+fn store_checkpoint(service: &DynamicGraphService, shared: &Shared) -> u64 {
+    let cp = service.checkpoint();
+    let seq = cp.seq;
+    *shared.checkpoint_slot() = Some(cp);
+    seq
+}
+
+fn maybe_checkpoint(service: &DynamicGraphService, shared: &Shared, every: u64) {
+    let seq = service.update_seq();
+    let due = match &*shared.checkpoint_slot() {
+        None => true,
+        Some(cp) => seq >= cp.seq + every.max(1),
+    };
+    if due {
+        store_checkpoint(service, shared);
+    }
+}
+
+/// Process requests until every handle is dropped. Expired mutating
+/// requests are shed; successful updates refresh the shared checkpoint.
+fn serve_loop(
+    service: &mut DynamicGraphService,
+    rx: &mpsc::Receiver<Envelope>,
+    shared: &Shared,
+    cfg: &ServerConfig,
+) {
+    while let Ok(env) = rx.recv() {
+        let expired = env.deadline.is_some_and(|d| Instant::now() > d);
+        match env.req {
+            Request::Update(batch, resp) => {
+                if expired {
+                    let _ = resp.send(Err(ServerError::DeadlineExceeded));
+                    continue;
+                }
+                let result = service
+                    .apply_update(batch)
+                    .map_err(|e| ServerError::Rejected(e.to_string()));
+                let ok = result.is_ok();
+                let _ = resp.send(result);
+                if ok {
+                    maybe_checkpoint(service, shared, cfg.checkpoint_every);
+                }
+            }
+            Request::TopK(k, resp) => {
+                let _ = resp.send(service.top_k(k));
+            }
+            Request::RanksOf(vs, resp) => {
+                let ranks = service.ranks().unwrap_or(&[]);
+                let out = vs
+                    .iter()
+                    .map(|&v| ranks.get(v as usize).copied().unwrap_or(0.0))
+                    .collect();
+                let _ = resp.send(out);
+            }
+            Request::Stats(resp) => {
+                let _ = resp.send(service.metrics.summary());
+            }
+            Request::RefreshStatic(resp) => {
+                if expired {
+                    let _ = resp.send(Err(ServerError::DeadlineExceeded));
+                    continue;
+                }
+                let result = service
+                    .refresh_static()
+                    .map_err(|e| ServerError::Rejected(e.to_string()));
+                let ok = result.is_ok();
+                let _ = resp.send(result);
+                if ok {
+                    maybe_checkpoint(service, shared, cfg.checkpoint_every);
+                }
+            }
+            Request::Checkpoint(resp) => {
+                let _ = resp.send(store_checkpoint(service, shared));
+            }
+        }
+    }
+}
+
+/// Spawn the coordinator loop on a supervised thread; returns the handle.
 /// The loop exits when every handle is dropped.
 ///
 /// Takes a *factory* rather than a service: the PJRT client handles inside
 /// [`crate::runtime::ArtifactStore`] are not `Send`, so the service (and
-/// its store) must be constructed on the coordinator thread itself.
+/// its store) must be constructed on the coordinator thread itself. If the
+/// coordinator panics, the supervisor respawns it from the last checkpoint
+/// (store-less: it serves from the native engines) — the factory is only
+/// ever called once.
 pub fn spawn<F>(make: F) -> CoordinatorHandle
 where
     F: FnOnce() -> DynamicGraphService + Send + 'static,
 {
-    let (tx, rx) = mpsc::channel::<Request>();
+    spawn_with(make, ServerConfig::default())
+}
+
+/// [`spawn`] with explicit front-end tunables.
+pub fn spawn_with<F>(make: F, cfg: ServerConfig) -> CoordinatorHandle
+where
+    F: FnOnce() -> DynamicGraphService + Send + 'static,
+{
+    let (tx, rx) = mpsc::sync_channel::<Envelope>(cfg.queue_capacity.max(1));
+    let shared = Arc::new(Shared::default());
+    let handle = CoordinatorHandle {
+        tx,
+        shared: Arc::clone(&shared),
+        capacity: cfg.queue_capacity.max(1),
+    };
     std::thread::spawn(move || {
-        let mut service = make();
-        while let Ok(req) = rx.recv() {
-            match req {
-                Request::Update(batch, resp) => {
-                    let _ = resp.send(service.apply_update(batch));
-                }
-                Request::TopK(k, resp) => {
-                    let _ = resp.send(service.top_k(k));
-                }
-                Request::RanksOf(vs, resp) => {
-                    let ranks = service.ranks().unwrap_or(&[]);
-                    let out = vs
-                        .iter()
-                        .map(|&v| ranks.get(v as usize).copied().unwrap_or(0.0))
-                        .collect();
-                    let _ = resp.send(out);
-                }
-                Request::Stats(resp) => {
-                    let _ = resp.send(service.metrics.summary());
-                }
-                Request::RefreshStatic(resp) => {
-                    let _ = resp.send(service.refresh_static());
+        let mut make = Some(make);
+        loop {
+            let make_once = make.take();
+            let done = catch_unwind(AssertUnwindSafe(|| {
+                let mut service = match make_once {
+                    Some(f) => f(),
+                    None => {
+                        let cp = shared.checkpoint_slot().clone();
+                        match cp.as_ref().map(|cp| DynamicGraphService::restore(cp, None))
+                        {
+                            Some(Ok(s)) => s,
+                            // no checkpoint (or a poisoned one): nothing
+                            // safe to resume from — shut down
+                            _ => return true,
+                        }
+                    }
+                };
+                serve_loop(&mut service, &rx, &shared, &cfg);
+                true
+            }));
+            match done {
+                Ok(_) => break, // channel closed: clean shutdown
+                Err(_) => {
+                    let n = shared.respawns.fetch_add(1, Ordering::SeqCst) + 1;
+                    if n > cfg.respawn_limit {
+                        break; // dropping rx: handles observe Stopped
+                    }
                 }
             }
         }
     });
-    CoordinatorHandle { tx }
+    handle
 }
 
 #[cfg(test)]
@@ -130,6 +389,7 @@ mod tests {
         assert!(ranks.iter().all(|&r| r > 0.0));
         let stats = h.stats().unwrap();
         assert!(stats.contains("updates=2"));
+        assert!(stats.contains("watchdog_trips=0"), "{stats}");
     }
 
     #[test]
@@ -163,5 +423,37 @@ mod tests {
         h.update(BatchUpdate::default()).unwrap();
         let rep = h.refresh_static().unwrap();
         assert!(rep.iterations > 0);
+    }
+
+    #[test]
+    fn checkpoints_accumulate_automatically() {
+        let b = er::generate(120, 4.0, 2);
+        let h = spawn_with(
+            move || DynamicGraphService::new(b, None, PagerankConfig::default()),
+            ServerConfig { checkpoint_every: 1, ..Default::default() },
+        );
+        assert!(h.last_checkpoint().is_none());
+        h.update(BatchUpdate::default()).unwrap();
+        let cp = h.last_checkpoint().expect("first update checkpoints");
+        assert_eq!(cp.seq, 1);
+        assert!(cp.ranks.is_some());
+        let seq = h.checkpoint_now().unwrap();
+        assert_eq!(seq, 1, "on-demand checkpoint at current seq");
+    }
+
+    #[test]
+    fn zero_deadline_request_is_shed() {
+        let h = spawn(|| {
+            DynamicGraphService::new(er::generate(400, 4.0, 7), None, PagerankConfig::default())
+        });
+        h.update(BatchUpdate::default()).unwrap();
+        // a deadline that has already passed when the coordinator dequeues
+        // the request: shed server-side or timed out client-side
+        let err = h
+            .update_with_deadline(BatchUpdate::default(), Duration::ZERO)
+            .unwrap_err();
+        assert_eq!(err, ServerError::DeadlineExceeded);
+        // the service is still healthy
+        assert_eq!(h.top_k(3).unwrap().len(), 3);
     }
 }

@@ -1,5 +1,32 @@
 //! PageRank configuration — the paper's Section 5.1.2 settings as defaults.
 
+use std::fmt;
+
+/// A [`PagerankConfig`] field holds a value no engine can run with.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ConfigError {
+    /// Damping factor outside (0, 1).
+    Alpha(f64),
+    /// A tolerance (τ, τ_f or τ_p) that is negative or non-finite.
+    Tolerance(&'static str, f64),
+    /// `max_iterations == 0`: no engine would ever produce ranks.
+    ZeroIterations,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Alpha(a) => write!(f, "alpha {a} outside (0, 1)"),
+            ConfigError::Tolerance(name, v) => {
+                write!(f, "{name} = {v} must be finite and non-negative")
+            }
+            ConfigError::ZeroIterations => write!(f, "max_iterations must be >= 1"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
 /// Tolerances and limits shared by every engine and approach.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PagerankConfig {
@@ -46,6 +73,54 @@ impl PagerankConfig {
     pub fn with_threads(self, threads: usize) -> Self {
         Self { threads, ..self }
     }
+
+    /// Check every field for values no engine can run with (NaN tolerances,
+    /// α outside (0, 1), a zero iteration cap). Returns the first violation.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if !self.alpha.is_finite() || self.alpha <= 0.0 || self.alpha >= 1.0 {
+            return Err(ConfigError::Alpha(self.alpha));
+        }
+        for (name, v) in [
+            ("tau", self.tau),
+            ("tau_frontier", self.tau_frontier),
+            ("tau_prune", self.tau_prune),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(ConfigError::Tolerance(name, v));
+            }
+        }
+        if self.max_iterations == 0 {
+            return Err(ConfigError::ZeroIterations);
+        }
+        Ok(())
+    }
+
+    /// A valid configuration derived from this one by clamping each bad
+    /// field to its paper default. The coordinator sanitizes untrusted
+    /// configs at construction so no later engine run can divide by zero or
+    /// spin forever; callers who want the typed diagnosis use [`validate`].
+    ///
+    /// [`validate`]: PagerankConfig::validate
+    pub fn sanitized(self) -> Self {
+        let d = Self::default();
+        let tol = |v: f64, d: f64| if v.is_finite() && v >= 0.0 { v } else { d };
+        Self {
+            alpha: if self.alpha.is_finite() && self.alpha > 0.0 && self.alpha < 1.0 {
+                self.alpha
+            } else {
+                d.alpha
+            },
+            tau: tol(self.tau, d.tau),
+            tau_frontier: tol(self.tau_frontier, d.tau_frontier),
+            tau_prune: tol(self.tau_prune, d.tau_prune),
+            max_iterations: if self.max_iterations == 0 {
+                d.max_iterations
+            } else {
+                self.max_iterations
+            },
+            threads: self.threads,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -69,5 +144,44 @@ mod tests {
         let c = PagerankConfig::default().with_threads(4);
         assert_eq!(c.threads, 4);
         assert_eq!(c.alpha, 0.85);
+    }
+
+    #[test]
+    fn validate_catches_each_field() {
+        assert!(PagerankConfig::default().validate().is_ok());
+        assert!(PagerankConfig::reference().validate().is_ok());
+        let bad_alpha = PagerankConfig { alpha: 1.5, ..Default::default() };
+        assert_eq!(bad_alpha.validate(), Err(ConfigError::Alpha(1.5)));
+        let nan_tau = PagerankConfig { tau: f64::NAN, ..Default::default() };
+        assert!(matches!(nan_tau.validate(), Err(ConfigError::Tolerance("tau", _))));
+        let neg_tf = PagerankConfig { tau_frontier: -1.0, ..Default::default() };
+        assert!(matches!(
+            neg_tf.validate(),
+            Err(ConfigError::Tolerance("tau_frontier", _))
+        ));
+        let zero_it = PagerankConfig { max_iterations: 0, ..Default::default() };
+        assert_eq!(zero_it.validate(), Err(ConfigError::ZeroIterations));
+    }
+
+    #[test]
+    fn sanitized_clamps_only_bad_fields() {
+        let c = PagerankConfig {
+            alpha: f64::NAN,
+            tau: -3.0,
+            tau_frontier: 1e-5,
+            tau_prune: f64::INFINITY,
+            max_iterations: 0,
+            threads: 3,
+        }
+        .sanitized();
+        assert!(c.validate().is_ok());
+        assert_eq!(c.alpha, 0.85);
+        assert_eq!(c.tau, 1e-10);
+        assert_eq!(c.tau_frontier, 1e-5, "good field kept");
+        assert_eq!(c.tau_prune, 1e-6);
+        assert_eq!(c.max_iterations, 500);
+        assert_eq!(c.threads, 3);
+        let good = PagerankConfig::default().with_threads(2);
+        assert_eq!(good.sanitized(), good, "valid config untouched");
     }
 }

@@ -1,21 +1,54 @@
 //! Rank error measurement (paper Section 5.1.5): L1 norm of the returned
 //! ranks against a reference static run at τ = 1e-100 capped at 500
 //! iterations.
+//!
+//! The distance functions return a typed [`LengthMismatch`] instead of
+//! asserting: once checkpoints and restarts interleave, the two vectors can
+//! legitimately come from snapshots with different vertex counts, and the
+//! serving path must degrade gracefully rather than abort.
+
+use std::fmt;
 
 use super::config::PagerankConfig;
 use super::native::static_pagerank;
 use crate::graph::CsrGraph;
 
+/// Two rank vectors with different vertex counts were compared.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LengthMismatch {
+    pub left: usize,
+    pub right: usize,
+}
+
+impl fmt::Display for LengthMismatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "rank vector length mismatch: {} vs {} vertices",
+            self.left, self.right
+        )
+    }
+}
+
+impl std::error::Error for LengthMismatch {}
+
+fn check_lengths(a: &[f64], b: &[f64]) -> Result<(), LengthMismatch> {
+    if a.len() != b.len() {
+        return Err(LengthMismatch { left: a.len(), right: b.len() });
+    }
+    Ok(())
+}
+
 /// L1 distance between two rank vectors.
-pub fn l1_distance(a: &[f64], b: &[f64]) -> f64 {
-    assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+pub fn l1_distance(a: &[f64], b: &[f64]) -> Result<f64, LengthMismatch> {
+    check_lengths(a, b)?;
+    Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum())
 }
 
 /// L∞ distance.
-pub fn linf_distance(a: &[f64], b: &[f64]) -> f64 {
-    assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+pub fn linf_distance(a: &[f64], b: &[f64]) -> Result<f64, LengthMismatch> {
+    check_lengths(a, b)?;
+    Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max))
 }
 
 /// Reference ranks per Section 5.1.5 (τ = 1e-100, 500 iterations).
@@ -32,9 +65,22 @@ mod tests {
     fn distances() {
         let a = [0.5, 0.25, 0.25];
         let b = [0.25, 0.5, 0.25];
-        assert_eq!(l1_distance(&a, &b), 0.5);
-        assert_eq!(linf_distance(&a, &b), 0.25);
-        assert_eq!(l1_distance(&a, &a), 0.0);
+        assert_eq!(l1_distance(&a, &b).unwrap(), 0.5);
+        assert_eq!(linf_distance(&a, &b).unwrap(), 0.25);
+        assert_eq!(l1_distance(&a, &a).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn length_mismatch_is_typed_not_fatal() {
+        let a = [0.5, 0.5];
+        let b = [1.0];
+        let err = l1_distance(&a, &b).unwrap_err();
+        assert_eq!(err, LengthMismatch { left: 2, right: 1 });
+        assert!(err.to_string().contains("2 vs 1"));
+        assert!(linf_distance(&a, &b).is_err());
+        // converts into anyhow::Error through `?`
+        let as_anyhow: anyhow::Error = err.into();
+        assert!(as_anyhow.to_string().contains("mismatch"));
     }
 
     #[test]
@@ -44,6 +90,6 @@ mod tests {
         let reference = reference_ranks(&g, &gt);
         let normal = static_pagerank(&g, &gt, &PagerankConfig::default(), None);
         // default-τ run is close to the reference, but not beyond it
-        assert!(l1_distance(&normal.ranks, &reference) < 1e-7);
+        assert!(l1_distance(&normal.ranks, &reference).unwrap() < 1e-7);
     }
 }

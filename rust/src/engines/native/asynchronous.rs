@@ -126,7 +126,7 @@ mod tests {
         let cfg = PagerankConfig::default();
         let sync = static_pagerank(&g, &gt, &cfg, None);
         let asyn = static_async(&g, &gt, &cfg, None);
-        assert!(l1_distance(&sync.ranks, &asyn.ranks) < 1e-7);
+        assert!(l1_distance(&sync.ranks, &asyn.ranks).unwrap() < 1e-7);
     }
 
     #[test]
@@ -163,7 +163,7 @@ mod tests {
         let truth = static_pagerank(&g, &gt, &cfg, None).ranks;
         for prune in [false, true] {
             let res = dynamic_frontier_async(&g, &gt, &cfg, &prev, &upd, prune);
-            let err = l1_distance(&res.ranks, &truth);
+            let err = l1_distance(&res.ranks, &truth).unwrap();
             assert!(err < 1e-2, "prune={prune}: {err}");
             assert!(res.initially_affected > 0);
         }

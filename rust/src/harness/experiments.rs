@@ -169,7 +169,7 @@ pub fn run_batch_series(
             let res = runner.run(a, substrate, &g, &gt, &old_csr, Some(&prev[&a]), upd)?;
             let o = out.get_mut(&a).unwrap();
             o.times.push(res.elapsed.as_secs_f64());
-            o.errors.push(l1_distance(&res.ranks, &reference));
+            o.errors.push(l1_distance(&res.ranks, &reference)?);
             o.iterations.push(res.iterations);
             prev.insert(a, res.ranks);
         }

@@ -179,7 +179,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let reference = pagerank_dynamic::engines::error::reference_ranks(&g, &gt);
     println!(
         "L1 error vs reference: {:.3e}",
-        pagerank_dynamic::engines::error::l1_distance(&res.ranks, &reference)
+        pagerank_dynamic::engines::error::l1_distance(&res.ranks, &reference)?
     );
     Ok(())
 }

@@ -134,6 +134,6 @@ fn long_update_sequence_stays_accurate() {
     let g = shadow.to_csr();
     let gt = g.transpose();
     let truth = reference_ranks(&g, &gt);
-    let err = l1_distance(service.ranks().unwrap(), &truth);
+    let err = l1_distance(service.ranks().unwrap(), &truth).unwrap();
     assert!(err < 5e-3, "accumulated error {err}");
 }

@@ -49,7 +49,7 @@ fn device_static_matches_native() {
         let nat = native::static_pagerank(&g, &gt, &cfg, None);
         assert_eq!(dev.iterations, nat.iterations);
         assert!(
-            l1_distance(&dev.ranks, &nat.ranks) < 1e-9,
+            l1_distance(&dev.ranks, &nat.ranks).unwrap() < 1e-9,
             "device vs native static"
         );
         assert!((dev.ranks.iter().sum::<f64>() - 1.0).abs() < 1e-6);
@@ -74,13 +74,13 @@ fn device_dynamic_approaches_match_native() {
     // ND
     let dev = eng.naive_dynamic(&dg, &cfg, &prev).unwrap();
     let nat = native::naive_dynamic(&g, &gt, &cfg, &prev);
-    assert!(l1_distance(&dev.ranks, &nat.ranks) < 1e-9, "ND");
+    assert!(l1_distance(&dev.ranks, &nat.ranks).unwrap() < 1e-9, "ND");
     assert_eq!(dev.iterations, nat.iterations, "ND iterations");
 
     // DT
     let dev = eng.dynamic_traversal(&dg, &g, &old_g, &cfg, &prev, &upd).unwrap();
     let nat = native::dynamic::dynamic_traversal(&g, &gt, &old_g, &cfg, &prev, &upd);
-    assert!(l1_distance(&dev.ranks, &nat.ranks) < 1e-9, "DT");
+    assert!(l1_distance(&dev.ranks, &nat.ranks).unwrap() < 1e-9, "DT");
     assert_eq!(dev.initially_affected, nat.initially_affected);
 
     // DF / DF-P across every partition mode and worklist setting
@@ -97,7 +97,7 @@ fn device_dynamic_approaches_match_native() {
                     .dynamic_frontier(&dg, &g, &cfg, &prev, &upd, prune, mode, wl)
                     .unwrap();
                 assert!(
-                    l1_distance(&dev.ranks, &nat.ranks) < 1e-9,
+                    l1_distance(&dev.ranks, &nat.ranks).unwrap() < 1e-9,
                     "prune={prune} mode={mode:?} wl={wl}"
                 );
                 assert_eq!(
@@ -131,7 +131,7 @@ fn device_empty_batch_noop() {
         )
         .unwrap();
     assert_eq!(res.initially_affected, 0);
-    assert!(l1_distance(&res.ranks, &prev) < 1e-12);
+    assert!(l1_distance(&res.ranks, &prev).unwrap() < 1e-12);
 }
 
 #[test]
@@ -152,7 +152,7 @@ fn run_approach_dispatch() {
         let res = eng
             .run_approach(a, &dg, &g, &old_g, &cfg, Some(&prev), &upd)
             .unwrap();
-        let err = l1_distance(&res.ranks, &reference);
+        let err = l1_distance(&res.ranks, &reference).unwrap();
         assert!(err < 1e-3, "{a:?} err={err}");
     }
 }

@@ -46,7 +46,7 @@ fn prop_static_ranks_are_distribution() {
             &PagerankConfig { tau: 1e-13, ..cfg },
             None,
         );
-        assert!(linf_distance(&res.ranks, &tight.ranks) < 1e-8, "seed {seed}");
+        assert!(linf_distance(&res.ranks, &tight.ranks).unwrap() < 1e-8, "seed {seed}");
     }
 }
 
@@ -148,7 +148,7 @@ fn prop_frontier_error_bounded() {
         for prune in [false, true] {
             let res =
                 native::dynamic::dynamic_frontier(&g, &gt, &cfg, &prev, &upd, prune);
-            let err = l1_distance(&res.ranks, &truth);
+            let err = l1_distance(&res.ranks, &truth).unwrap();
             assert!(err < 1e-2, "seed {seed} prune={prune}: err {err}");
         }
     }
@@ -204,11 +204,11 @@ fn prop_empty_batch_fixed_point() {
         let empty = BatchUpdate::default();
 
         let df = native::dynamic::dynamic_frontier(&g, &gt, &cfg, &prev, &empty, false);
-        assert_eq!(l1_distance(&df.ranks, &prev), 0.0, "DF seed {seed}");
+        assert_eq!(l1_distance(&df.ranks, &prev).unwrap(), 0.0, "DF seed {seed}");
         let dfp = native::dynamic::dynamic_frontier(&g, &gt, &cfg, &prev, &empty, true);
-        assert_eq!(l1_distance(&dfp.ranks, &prev), 0.0, "DF-P seed {seed}");
+        assert_eq!(l1_distance(&dfp.ranks, &prev).unwrap(), 0.0, "DF-P seed {seed}");
         let dt = native::dynamic::dynamic_traversal(&g, &gt, &g, &cfg, &prev, &empty);
-        assert_eq!(l1_distance(&dt.ranks, &prev), 0.0, "DT seed {seed}");
+        assert_eq!(l1_distance(&dt.ranks, &prev).unwrap(), 0.0, "DT seed {seed}");
     }
 }
 

@@ -28,9 +28,9 @@ fn assert_same_ranks(tag: &str, base: &pagerank_dynamic::engines::PagerankResult
                      got: &pagerank_dynamic::engines::PagerankResult) {
     assert_eq!(got.iterations, base.iterations, "{tag}: iteration count drifted");
     assert!(
-        l1_distance(&got.ranks, &base.ranks) <= 1e-12,
+        l1_distance(&got.ranks, &base.ranks).unwrap() <= 1e-12,
         "{tag}: ranks drifted by {}",
-        l1_distance(&got.ranks, &base.ranks)
+        l1_distance(&got.ranks, &base.ranks).unwrap()
     );
     for (i, (a, b)) in got.ranks.iter().zip(&base.ranks).enumerate() {
         assert_eq!(a.to_bits(), b.to_bits(), "{tag}: rank {i} not bit-identical");

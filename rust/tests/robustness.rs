@@ -1,0 +1,370 @@
+//! Robustness suite: deterministic fault injection against the coordinator
+//! and its serving front-end.
+//!
+//! Every fault class the [`pagerank_dynamic::coordinator::FaultPlan`]
+//! harness can produce is driven end-to-end here, and the suite asserts the
+//! three service-level guarantees of the robustness layer:
+//!
+//! 1. every injected fault is *detected* (quarantine report, watchdog trip,
+//!    or supervisor respawn — never silent corruption);
+//! 2. the service *keeps answering* `top_k` / `ranks_of` during recovery;
+//! 3. post-recovery ranks match a from-scratch static reference.
+//!
+//! Everything is seeded: a failure replays bit-for-bit.
+
+use std::time::Duration;
+
+use pagerank_dynamic::batch::{self, BatchUpdate, UpdateError};
+use pagerank_dynamic::coordinator::server::{spawn_with, ServerConfig, ServerError};
+use pagerank_dynamic::coordinator::{Checkpoint, DynamicGraphService, Fault, FaultPlan};
+use pagerank_dynamic::engines::error::{l1_distance, reference_ranks};
+use pagerank_dynamic::engines::Approach;
+use pagerank_dynamic::generators::er;
+use pagerank_dynamic::graph::GraphBuilder;
+use pagerank_dynamic::PagerankConfig;
+
+/// A warmed native-only service plus a shadow builder mirroring its graph.
+fn warm_service(n: usize, seed: u64) -> (DynamicGraphService, GraphBuilder) {
+    let base = er::generate(n, 5.0, seed);
+    let mut shadow = base.clone();
+    shadow.ensure_self_loops();
+    let mut s = DynamicGraphService::new(base, None, PagerankConfig::default());
+    s.apply_update(BatchUpdate::default()).unwrap();
+    (s, shadow)
+}
+
+fn assert_ranks_match_reference(s: &DynamicGraphService, shadow: &GraphBuilder, tol: f64) {
+    let g = shadow.to_csr();
+    let gt = g.transpose();
+    let truth = reference_ranks(&g, &gt);
+    let err = l1_distance(s.ranks().unwrap(), &truth).unwrap();
+    assert!(err < tol, "L1 vs static reference: {err}");
+}
+
+// ---------------------------------------------------------------- ingestion
+
+#[test]
+fn empty_batch_is_noop() {
+    let (mut s, shadow) = warm_service(200, 1);
+    let before = s.ranks().unwrap().to_vec();
+    let m0 = s.num_edges();
+    let rep = s.apply_update(BatchUpdate::default()).unwrap();
+    assert_eq!(rep.edges_changed, 0);
+    assert_eq!(rep.quarantined, 0);
+    assert_eq!(s.num_edges(), m0);
+    assert_ranks_match_reference(&s, &shadow, 1e-6);
+    // an empty batch must not move the installed ranks materially
+    let drift = l1_distance(s.ranks().unwrap(), &before).unwrap();
+    assert!(drift < 1e-9, "empty batch moved ranks by {drift}");
+}
+
+#[test]
+fn all_duplicate_insertions_are_quarantined() {
+    let (mut s, shadow) = warm_service(200, 2);
+    let m0 = s.num_edges();
+    let dup: Vec<_> = shadow.real_edges().into_iter().take(5).collect();
+    assert_eq!(dup.len(), 5);
+    let rep = s
+        .apply_update(BatchUpdate { deletions: vec![], insertions: dup })
+        .unwrap();
+    assert_eq!(rep.quarantined, 5);
+    assert_eq!(rep.edges_changed, 0);
+    assert_eq!(s.num_edges(), m0, "graph unchanged");
+    assert!(rep
+        .rejections
+        .iter()
+        .all(|r| r.error == UpdateError::DuplicateInsertion));
+    assert_eq!(s.metrics.quarantined_edits, 5);
+}
+
+#[test]
+fn phantom_deletions_are_quarantined() {
+    let (mut s, shadow) = warm_service(150, 3);
+    let n = shadow.num_vertices();
+    // find an absent (non-self-loop) edge to "delete"
+    let v = (1..n as u32).find(|&v| !shadow.has_edge(0, v)).unwrap();
+    let rep = s
+        .apply_update(BatchUpdate { deletions: vec![(0, v)], insertions: vec![] })
+        .unwrap();
+    assert_eq!(rep.quarantined, 1);
+    assert_eq!(rep.rejections[0].error, UpdateError::PhantomDeletion);
+    assert_eq!(rep.edges_changed, 0);
+}
+
+#[test]
+fn boundary_vertex_id_is_out_of_range() {
+    // id == num_vertices is the canonical off-by-one: must be quarantined,
+    // not a builder panic
+    let (mut s, _) = warm_service(100, 4);
+    let n = s.num_vertices() as u32;
+    let rep = s
+        .apply_update(BatchUpdate {
+            deletions: vec![(n, 0)],
+            insertions: vec![(0, n), (n, n)],
+        })
+        .unwrap();
+    assert_eq!(rep.quarantined, 3);
+    assert!(rep
+        .rejections
+        .iter()
+        .all(|r| matches!(r.error, UpdateError::OutOfRange { num_vertices } if num_vertices == 100)));
+}
+
+#[test]
+fn insert_and_delete_same_edge_in_one_batch() {
+    let (mut s, shadow) = warm_service(150, 5);
+    let m0 = s.num_edges();
+    // existing edge: delete-then-reinsert is legal (deletions apply first)
+    let e = shadow.real_edges()[0];
+    let rep = s
+        .apply_update(BatchUpdate { deletions: vec![e], insertions: vec![e] })
+        .unwrap();
+    assert_eq!(rep.quarantined, 0);
+    assert_eq!(rep.edges_changed, 2, "both edits executed");
+    assert_eq!(s.num_edges(), m0, "net zero");
+    // absent edge: the phantom deletion is quarantined, the insertion lands
+    let n = shadow.num_vertices() as u32;
+    let v = (1..n).find(|&v| !shadow.has_edge(0, v)).unwrap();
+    let rep = s
+        .apply_update(BatchUpdate { deletions: vec![(0, v)], insertions: vec![(0, v)] })
+        .unwrap();
+    assert_eq!(rep.quarantined, 1);
+    assert_eq!(rep.rejections[0].error, UpdateError::PhantomDeletion);
+    assert_eq!(rep.edges_changed, 1);
+    assert_eq!(s.num_edges(), m0 + 1);
+}
+
+#[test]
+fn malformed_batch_fault_is_fully_quarantined() {
+    let (mut s, mut shadow) = warm_service(300, 6);
+    s.arm_faults(FaultPlan::new(11).at(1, Fault::MalformedBatch { edits: 9 }));
+    // a legitimate batch rides along with the injected garbage
+    let good = batch::random_batch(&shadow, 4, 0.8, 41);
+    batch::apply(&mut shadow, &good);
+    let rep = s.apply_update(good).unwrap();
+    assert_eq!(rep.quarantined, 9, "all injected edits rejected");
+    assert_eq!(rep.edges_changed, 4, "the clean rider applied");
+    assert_eq!(rep.watchdog_trips, 0);
+    assert_eq!(s.num_edges(), shadow.num_edges());
+    assert_ranks_match_reference(&s, &shadow, 1e-6);
+}
+
+// ----------------------------------------------------------------- watchdog
+
+#[test]
+fn nan_corruption_is_detected_and_recovered() {
+    let (mut s, mut shadow) = warm_service(400, 7);
+    s.arm_faults(FaultPlan::new(21).at(1, Fault::CorruptRanks { nans: 7 }));
+    let b = batch::random_batch(&shadow, 3, 0.8, 51);
+    batch::apply(&mut shadow, &b);
+    let rep = s.apply_update(b).unwrap();
+    assert_eq!(rep.watchdog_trips, 1, "corruption tripped exactly once");
+    assert!(rep.degraded);
+    assert!(s.degraded());
+    assert_eq!(s.metrics.watchdog_trips, 1);
+    assert_eq!(s.metrics.health_recoveries, 1);
+    // the bad vector was never installed
+    assert!(s.ranks().unwrap().iter().all(|r| r.is_finite()));
+    assert_ranks_match_reference(&s, &shadow, 1e-6);
+    // queries still answer while degraded
+    assert_eq!(s.top_k(5).len(), 5);
+}
+
+#[test]
+fn iteration_stall_is_detected_and_recovered() {
+    let (mut s, mut shadow) = warm_service(400, 8);
+    s.arm_faults(FaultPlan::new(22).at(1, Fault::Stall));
+    let b = batch::random_batch(&shadow, 3, 0.8, 52);
+    batch::apply(&mut shadow, &b);
+    let rep = s.apply_update(b).unwrap();
+    assert_eq!(rep.watchdog_trips, 1, "stall tripped the convergence check");
+    assert!(rep.iterations < PagerankConfig::default().max_iterations);
+    assert_ranks_match_reference(&s, &shadow, 1e-6);
+}
+
+#[test]
+fn degraded_state_clears_on_static_refresh() {
+    let (mut s, mut shadow) = warm_service(300, 9);
+    s.arm_faults(FaultPlan::new(23).at(1, Fault::CorruptRanks { nans: 3 }));
+    let b = batch::random_batch(&shadow, 2, 0.8, 53);
+    batch::apply(&mut shadow, &b);
+    s.apply_update(b).unwrap();
+    assert!(s.degraded());
+    // while degraded the policy stays conservative (ND, never DF-P)
+    let b = batch::random_batch(&shadow, 1, 1.0, 54);
+    batch::apply(&mut shadow, &b);
+    let rep = s.apply_update(b).unwrap();
+    assert_eq!(rep.approach, Approach::NaiveDynamic);
+    // a successful full refresh restores healthy state
+    let rep = s.refresh_static().unwrap();
+    assert!(!rep.degraded);
+    assert!(!s.degraded());
+    assert_ranks_match_reference(&s, &shadow, 1e-6);
+}
+
+// ----------------------------------------------------- checkpoint / restore
+
+#[test]
+fn checkpoint_json_roundtrip_restores_bit_exact_ranks() {
+    let (mut s, mut shadow) = warm_service(250, 10);
+    let b = batch::random_batch(&shadow, 3, 0.8, 61);
+    batch::apply(&mut shadow, &b);
+    s.apply_update(b).unwrap();
+
+    let cp = s.checkpoint();
+    let doc = cp.to_json();
+    let back = Checkpoint::from_json(&doc).unwrap();
+    assert_eq!(back.seq, cp.seq);
+    assert_eq!(back.edges, cp.edges);
+
+    let r = DynamicGraphService::restore(&back, None).unwrap();
+    assert_eq!(r.num_vertices(), s.num_vertices());
+    assert_eq!(r.num_edges(), s.num_edges());
+    assert_eq!(r.update_seq(), s.update_seq());
+    assert_eq!(r.metrics.restores, 1);
+    for (a, b) in r.ranks().unwrap().iter().zip(s.ranks().unwrap()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "ranks survive JSON bit-exact");
+    }
+    assert_ranks_match_reference(&r, &shadow, 1e-6);
+}
+
+#[test]
+fn restore_rejects_tampered_checkpoint() {
+    let (s, _) = warm_service(100, 11);
+    let mut cp = s.checkpoint();
+    cp.ranks.as_mut().unwrap()[0] = f64::INFINITY;
+    assert!(DynamicGraphService::restore(&cp, None).is_err());
+    let mut cp = s.checkpoint();
+    cp.edges.push((5_000, 0));
+    assert!(DynamicGraphService::restore(&cp, None).is_err());
+}
+
+// ----------------------------------------------------------------- serving
+
+#[test]
+fn supervisor_respawns_after_kill_and_keeps_serving() {
+    let n = 500usize;
+    let base = er::generate(n, 5.0, 12);
+    let mut shadow = base.clone();
+    shadow.ensure_self_loops();
+    let plan = FaultPlan::new(31).at(2, Fault::KillCoordinator);
+    let h = spawn_with(
+        move || {
+            let mut s = DynamicGraphService::new(base, None, PagerankConfig::default());
+            s.arm_faults(plan);
+            s
+        },
+        ServerConfig { queue_capacity: 8, checkpoint_every: 1, respawn_limit: 2 },
+    );
+
+    h.update(BatchUpdate::default()).unwrap(); // seq 0: initial static
+    let b1 = batch::random_batch(&shadow, 2, 0.8, 71);
+    batch::apply(&mut shadow, &b1);
+    h.update(b1).unwrap(); // seq 1 — checkpointed
+    assert!(h.last_checkpoint().is_some());
+
+    // seq 2: the injected panic. The in-flight request is dropped (typed,
+    // retryable), its batch is NOT applied anywhere.
+    let err = h.update(batch::random_batch(&shadow, 2, 0.8, 72)).unwrap_err();
+    assert_eq!(err, ServerError::Dropped);
+
+    // the service answers during/after recovery without a new factory call
+    let top = h.top_k(5).unwrap();
+    assert_eq!(top.len(), 5);
+    assert!(top.iter().all(|(_, r)| r.is_finite()));
+    assert_eq!(h.respawns(), 1);
+
+    // post-recovery updates land on the restored (warm) state
+    let b3 = batch::random_batch(&shadow, 2, 0.8, 73);
+    batch::apply(&mut shadow, &b3);
+    let rep = h.update(b3).unwrap();
+    assert_ne!(rep.approach, Approach::Static, "respawned warm, not cold");
+
+    let g = shadow.to_csr();
+    let gt = g.transpose();
+    let truth = reference_ranks(&g, &gt);
+    let served = h.ranks_of((0..n as u32).collect()).unwrap();
+    let err = l1_distance(&served, &truth).unwrap();
+    assert!(err < 1e-6, "post-recovery L1 vs reference: {err}");
+
+    let stats = h.stats().unwrap();
+    assert!(stats.contains("restores=1"), "{stats}");
+}
+
+#[test]
+fn backpressure_and_deadline_errors_are_typed() {
+    // a factory that sleeps keeps the queue undrained: deterministic
+    // backpressure without racing a real computation
+    let h = spawn_with(
+        move || {
+            std::thread::sleep(Duration::from_millis(400));
+            DynamicGraphService::new(er::generate(120, 4.0, 13), None, PagerankConfig::default())
+        },
+        ServerConfig { queue_capacity: 1, ..Default::default() },
+    );
+    // first deadline request occupies the single queue slot and times out
+    let e1 = h
+        .top_k_with_deadline(3, Duration::from_millis(10))
+        .unwrap_err();
+    assert_eq!(e1, ServerError::DeadlineExceeded);
+    // the queue is full now: typed backpressure, not a hang
+    let e2 = h
+        .update_with_deadline(BatchUpdate::default(), Duration::from_millis(10))
+        .unwrap_err();
+    assert_eq!(e2, ServerError::Backpressure { capacity: 1 });
+    assert_eq!(e2.to_string(), "request queue full (1 slots)");
+    // once the coordinator is up, blocking requests drain normally
+    let rep = h.update(BatchUpdate::default()).unwrap();
+    assert!(rep.iterations > 0);
+    assert_eq!(h.top_k(3).unwrap().len(), 3);
+}
+
+#[test]
+fn expired_update_is_shed_without_executing() {
+    let s_graph = er::generate(150, 4.0, 14);
+    let h = spawn_with(
+        move || DynamicGraphService::new(s_graph, None, PagerankConfig::default()),
+        ServerConfig::default(),
+    );
+    h.update(BatchUpdate::default()).unwrap();
+    let before = h.stats().unwrap();
+    let err = h
+        .update_with_deadline(BatchUpdate::default(), Duration::ZERO)
+        .unwrap_err();
+    assert_eq!(err, ServerError::DeadlineExceeded);
+    // the shed update never ran: the counter did not advance
+    let after = h.stats().unwrap();
+    assert_eq!(before, after, "shed request must not execute");
+}
+
+#[test]
+fn unwarmed_queries_never_panic() {
+    // direct service: no ranks computed yet
+    let s = DynamicGraphService::new(er::generate(60, 4.0, 15), None, PagerankConfig::default());
+    assert!(s.top_k(10).is_empty());
+    assert!(s.ranks().is_none());
+    assert!(s.metrics.summary().contains("updates=0"));
+    // through the server: reads answer (empty / zero), nothing hangs
+    let h = spawn_with(
+        || DynamicGraphService::new(er::generate(60, 4.0, 15), None, PagerankConfig::default()),
+        ServerConfig::default(),
+    );
+    assert!(h.top_k(10).unwrap().is_empty());
+    assert_eq!(h.ranks_of(vec![0, 1, 2]).unwrap(), vec![0.0, 0.0, 0.0]);
+    assert!(h.stats().unwrap().contains("updates=0"));
+}
+
+#[test]
+fn poisoned_config_is_sanitized_not_fatal() {
+    let cfg = PagerankConfig {
+        alpha: f64::NAN,
+        tau: -1.0,
+        max_iterations: 0,
+        ..PagerankConfig::default()
+    };
+    let mut s = DynamicGraphService::new(er::generate(100, 4.0, 16), None, cfg);
+    assert_eq!(s.cfg.alpha, 0.85, "clamped to the paper default");
+    let rep = s.apply_update(BatchUpdate::default()).unwrap();
+    assert!(rep.iterations > 0);
+    assert!(s.ranks().unwrap().iter().all(|r| r.is_finite() && *r >= 0.0));
+}
