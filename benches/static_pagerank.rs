@@ -1,8 +1,10 @@
 //! Bench: Static PageRank end-to-end.
 //!
-//! Part 1 (always runs): native engine thread-scaling sweep on an RMAT
-//! web-family graph — threads 1/2/4/max on the scoped-thread pool — printed
-//! and written as machine-readable `BENCH_native_scaling.json`.
+//! Part 1 (always runs): native engine thread-scaling sweep — threads
+//! 1/2/4/max, persistent work-stealing pool vs legacy per-region scoped
+//! spawn, on a large and a small skewed RMAT web graph (the small one
+//! isolates spawn overhead, the skew exercises stealing) — printed and
+//! written as machine-readable `BENCH_native_scaling.json`.
 //!
 //! Part 2: device engine vs native CPU vs the Hornet-like / Gunrock-like
 //! baselines (paper Table 1 / Figure 2). The device column requires
@@ -44,53 +46,69 @@ fn sweep_threads() -> Vec<usize> {
 }
 
 fn native_scaling_sweep(cfg: &PagerankConfig) {
-    let b = rmat::generate(16, 16.0, rmat::RmatParams::WEB, 42);
-    let g = b.to_csr();
-    let gt = g.transpose();
-    println!(
-        "native static PageRank thread scaling (RMAT web, n={}, m={}, {} cores):",
-        g.num_vertices(),
-        g.num_edges(),
-        par::available()
-    );
-
+    // Two regimes: the large graph measures steady-state scaling (skewed
+    // hubs exercise the stealing deques); the small graph runs many short
+    // parallel regions, where the persistent pool's amortized spawns are
+    // the whole difference.
+    let graphs = [("rmat-web-large", 16u32, 16.0f64), ("rmat-web-small", 12, 8.0)];
     let mut rows = String::new();
-    let mut t1 = f64::NAN;
-    for t in sweep_threads() {
-        let c = cfg.with_threads(t);
-        let mut iterations = 0usize;
-        let d = bench(|| {
-            let r = native::static_pagerank(&g, &gt, &c, None);
-            iterations = r.iterations;
-            r.elapsed
-        });
-        let secs = d.as_secs_f64();
-        if t == 1 {
-            t1 = secs;
-        }
+    for (family, scale, avg_deg) in graphs {
+        let b = rmat::generate(scale, avg_deg, rmat::RmatParams::WEB, 42);
+        let g = b.to_csr();
+        let gt = g.transpose();
         println!(
-            "  threads={:<3} {:>10}  ({} iters, speedup {:.2}x)",
-            t,
-            fmt_dur(d),
-            iterations,
-            t1 / secs
+            "native static PageRank thread scaling ({family}, n={}, m={}, {} cores):",
+            g.num_vertices(),
+            g.num_edges(),
+            par::available()
         );
-        if !rows.is_empty() {
-            rows.push_str(",\n");
+
+        let mut t1 = f64::NAN;
+        for t in sweep_threads() {
+            let mut iterations = 0usize;
+            let mut timed = |persistent: bool| {
+                let c = cfg.with_threads(t).with_pool_persistent(persistent);
+                bench(|| {
+                    let r = native::static_pagerank(&g, &gt, &c, None);
+                    iterations = r.iterations;
+                    r.elapsed
+                })
+                .as_secs_f64()
+            };
+            let pool = timed(true);
+            let spawn = timed(false);
+            if t == 1 {
+                t1 = pool;
+            }
+            println!(
+                "  threads={:<3} pool {:>10}  spawn {:>10}  ({} iters, \
+                 speedup {:.2}x, pool vs spawn {:.2}x)",
+                t,
+                fmt_dur(std::time::Duration::from_secs_f64(pool)),
+                fmt_dur(std::time::Duration::from_secs_f64(spawn)),
+                iterations,
+                t1 / pool,
+                spawn / pool
+            );
+            if !rows.is_empty() {
+                rows.push_str(",\n");
+            }
+            let _ = write!(
+                rows,
+                "    {{\"graph\": \"{family}\", \"n\": {}, \"m\": {}, \
+                 \"threads\": {t}, \"seconds_pool\": {pool:.6}, \
+                 \"seconds_spawn\": {spawn:.6}, \"iterations\": {iterations}, \
+                 \"speedup_vs_1\": {:.4}, \"pool_vs_spawn\": {:.4}}}",
+                g.num_vertices(),
+                g.num_edges(),
+                t1 / pool,
+                spawn / pool
+            );
         }
-        let _ = write!(
-            rows,
-            "    {{\"threads\": {t}, \"seconds\": {secs:.6}, \
-             \"iterations\": {iterations}, \"speedup_vs_1\": {:.4}}}",
-            t1 / secs
-        );
     }
     let json = format!(
-        "{{\n  \"bench\": \"native_static_scaling\",\n  \"graph\": \
-         {{\"family\": \"rmat-web\", \"scale\": 16, \"n\": {}, \"m\": {}}},\n  \
+        "{{\n  \"bench\": \"native_static_scaling\",\n  \
          \"available_parallelism\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
-        g.num_vertices(),
-        g.num_edges(),
         par::available(),
         rows
     );

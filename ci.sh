@@ -17,8 +17,22 @@ fi
 echo "=== cargo build --release ==="
 cargo build --release
 
-echo "=== cargo test -q (dev profile: debug assertions on) ==="
-cargo test -q
+# Determinism gate: the full suite runs twice with the worker-lane count
+# pinned via PAGERANK_THREADS. tests/pool_determinism.rs writes a digest of
+# every engine's rank bits to rust/target/rank_digest_t<N>.txt; any
+# schedule- or thread-count-dependent bit anywhere in the stack makes the
+# two files differ and fails the gate.
+rm -f rust/target/rank_digest_t*.txt
+
+echo "=== cargo test -q [PAGERANK_THREADS=1] (dev profile: debug assertions on) ==="
+PAGERANK_THREADS=1 cargo test -q
+
+echo "=== cargo test -q [PAGERANK_THREADS=8] ==="
+PAGERANK_THREADS=8 cargo test -q
+
+echo "=== golden rank digest: t1 vs t8 ==="
+diff -u rust/target/rank_digest_t1.txt rust/target/rank_digest_t8.txt
+echo "rank digests identical across thread counts"
 
 echo "=== cargo test -q --test robustness (fault-injection suite) ==="
 cargo test -q --test robustness

@@ -294,6 +294,54 @@ mod tests {
     }
 
     #[test]
+    fn batch_that_empties_the_graph_leaves_uniform_ranks() {
+        // deleting every real edge is a legal batch: the protected
+        // self-loops remain, so the result is n disconnected vertices with
+        // exactly uniform PageRank 1/n.
+        let mut g = graph();
+        let b = BatchUpdate { deletions: g.real_edges(), insertions: vec![] };
+        let v = validate(&g, &b);
+        assert!(v.is_fully_clean(), "{:?}", v.rejections);
+        let changed = batch::apply(&mut g, &v.clean);
+        assert_eq!(changed, 3);
+        assert!(g.real_edges().is_empty());
+        let mut fresh = GraphBuilder::new(5);
+        fresh.ensure_self_loops();
+        assert_eq!(g.to_csr(), fresh.to_csr(), "only self-loops left");
+
+        let csr = g.to_csr();
+        let gt = csr.transpose();
+        let cfg = crate::engines::config::PagerankConfig::default();
+        let res = crate::engines::native::static_pagerank(&csr, &gt, &cfg, None);
+        assert_eq!(res.iterations, 1, "uniform fixed point from the start");
+        for r in &res.ranks {
+            assert!((r - 0.2).abs() < 1e-12, "rank {r} != 1/5");
+        }
+    }
+
+    #[test]
+    fn applied_subset_matches_from_scratch_rebuild() {
+        // delete-then-insert of the same edge plus duplicates on both
+        // halves: the clean subset must land on exactly the edge set a
+        // fresh builder of the intended final graph has.
+        let mut g = graph();
+        let b = BatchUpdate {
+            deletions: vec![(0, 1), (0, 1), (1, 2)],
+            insertions: vec![(0, 1), (3, 4), (3, 4)],
+        };
+        let v = validate(&g, &b);
+        assert_eq!(v.quarantined(), 2, "{:?}", v.rejections);
+        assert_eq!(v.rejections[0].error, UpdateError::PhantomDeletion);
+        assert_eq!(v.rejections[1].error, UpdateError::DuplicateInsertion);
+        let changed = batch::apply(&mut g, &v.clean);
+        assert_eq!(changed, v.clean.len());
+
+        let mut want = GraphBuilder::from_edges(5, [(0, 1), (2, 3), (3, 4)]);
+        want.ensure_self_loops();
+        assert_eq!(g.to_csr(), want.to_csr(), "matches from-scratch rebuild");
+    }
+
+    #[test]
     fn validate_random_batches_are_always_clean() {
         let g = er::generate(300, 5.0, 3);
         for seed in 0..5 {

@@ -14,6 +14,7 @@
 //!   are validated on load — out-of-range edges, wrong-length or non-finite
 //!   ranks are typed errors, never a panic downstream.
 
+use std::collections::HashSet;
 use std::fmt::Write as _;
 
 use anyhow::{bail, Context, Result};
@@ -32,6 +33,14 @@ pub struct Checkpoint {
     pub num_vertices: usize,
     /// Every edge of the builder, self-loops included.
     pub edges: Vec<(VertexId, VertexId)>,
+    /// Delta reconstructing the *previous* snapshot (the `prev_csr` that
+    /// Dynamic Traversal BFSes over) from `edges`: edges the current graph
+    /// has that the previous snapshot lacked. Sorted for a deterministic
+    /// document.
+    pub prev_missing: Vec<(VertexId, VertexId)>,
+    /// The other half of the delta: edges the previous snapshot had that
+    /// the current graph lost (deletions applied by the last batch).
+    pub prev_extra: Vec<(VertexId, VertexId)>,
     /// Last-known-good ranks (`None` before the first computation).
     pub ranks: Option<Vec<f64>>,
     /// The serving configuration (restored services keep behaving the same).
@@ -46,8 +55,12 @@ impl Checkpoint {
     /// restored — it would re-poison the service it is meant to heal.
     pub fn validate(&self) -> Result<()> {
         let n = self.num_vertices;
-        if let Some((u, v)) =
-            self.edges.iter().find(|&&(u, v)| u as usize >= n || v as usize >= n)
+        if let Some((u, v)) = self
+            .edges
+            .iter()
+            .chain(&self.prev_missing)
+            .chain(&self.prev_extra)
+            .find(|&&(u, v)| u as usize >= n || v as usize >= n)
         {
             bail!("checkpoint edge ({u}, {v}) out of range for {n} vertices");
         }
@@ -63,12 +76,27 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// The previous snapshot's edge set (`prev_csr` at capture time),
+    /// reconstructed as `edges − prev_missing + prev_extra`, sorted.
+    /// Order is irrelevant to DT — the snapshot only drives a reachability
+    /// BFS — but sorting keeps restores deterministic.
+    pub fn prev_edges(&self) -> Vec<(VertexId, VertexId)> {
+        let missing: HashSet<(VertexId, VertexId)> =
+            self.prev_missing.iter().copied().collect();
+        let mut prev: Vec<(VertexId, VertexId)> =
+            self.edges.iter().copied().filter(|e| !missing.contains(e)).collect();
+        prev.extend(self.prev_extra.iter().copied());
+        prev.sort_unstable();
+        prev.dedup();
+        prev
+    }
+
     /// Serialize to a single JSON document.
     pub fn to_json(&self) -> String {
         let mut s = String::with_capacity(32 + self.edges.len() * 8);
         let _ = write!(
             s,
-            "{{\"format\":1,\"seq\":{},\"num_vertices\":{},\"cfg\":{{\"alpha\":{},\"tau\":{},\"tau_frontier\":{},\"tau_prune\":{},\"max_iterations\":{},\"threads\":{}}}",
+            "{{\"format\":1,\"seq\":{},\"num_vertices\":{},\"cfg\":{{\"alpha\":{},\"tau\":{},\"tau_frontier\":{},\"tau_prune\":{},\"max_iterations\":{},\"threads\":{},\"pool_persistent\":{}}}",
             self.seq,
             self.num_vertices,
             self.cfg.alpha,
@@ -76,16 +104,15 @@ impl Checkpoint {
             self.cfg.tau_frontier,
             self.cfg.tau_prune,
             self.cfg.max_iterations,
-            self.cfg.threads
+            self.cfg.threads,
+            self.cfg.pool_persistent
         );
-        s.push_str(",\"edges\":[");
-        for (i, (u, v)) in self.edges.iter().enumerate() {
-            if i > 0 {
-                s.push(',');
-            }
-            let _ = write!(s, "{u},{v}");
-        }
-        s.push(']');
+        s.push_str(",\"edges\":");
+        write_edge_pairs(&mut s, &self.edges);
+        s.push_str(",\"prev_missing\":");
+        write_edge_pairs(&mut s, &self.prev_missing);
+        s.push_str(",\"prev_extra\":");
+        write_edge_pairs(&mut s, &self.prev_extra);
         match &self.ranks {
             None => s.push_str(",\"ranks\":null"),
             Some(r) => {
@@ -134,20 +161,11 @@ impl Checkpoint {
             tau_prune: c.get("tau_prune")?.as_f64()?,
             max_iterations: c.get("max_iterations")?.as_usize()?,
             threads: c.get("threads")?.as_usize()?,
+            pool_persistent: c.get("pool_persistent")?.as_bool()?,
         };
-        let flat = v.get("edges")?.as_arr()?;
-        if flat.len() % 2 != 0 {
-            bail!("checkpoint edges array has odd length {}", flat.len());
-        }
-        let mut edges = Vec::with_capacity(flat.len() / 2);
-        for pair in flat.chunks_exact(2) {
-            let u = pair[0].as_usize()?;
-            let w = pair[1].as_usize()?;
-            if u > VertexId::MAX as usize || w > VertexId::MAX as usize {
-                bail!("checkpoint edge ({u}, {w}) exceeds vertex id range");
-            }
-            edges.push((u as VertexId, w as VertexId));
-        }
+        let edges = parse_edge_pairs(&v, "edges")?;
+        let prev_missing = parse_edge_pairs(&v, "prev_missing")?;
+        let prev_extra = parse_edge_pairs(&v, "prev_extra")?;
         let ranks = match v.get("ranks")? {
             Value::Null => None,
             Value::Arr(a) => {
@@ -171,10 +189,47 @@ impl Checkpoint {
         metrics.health_recoveries = k.get("health_recoveries")?.as_usize()?;
         metrics.restores = k.get("restores")?.as_usize()?;
 
-        let cp = Checkpoint { seq, num_vertices, edges, ranks, cfg, metrics };
+        let cp = Checkpoint {
+            seq,
+            num_vertices,
+            edges,
+            prev_missing,
+            prev_extra,
+            ranks,
+            cfg,
+            metrics,
+        };
         cp.validate()?;
         Ok(cp)
     }
+}
+
+fn write_edge_pairs(s: &mut String, edges: &[(VertexId, VertexId)]) {
+    s.push('[');
+    for (i, (u, v)) in edges.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{u},{v}");
+    }
+    s.push(']');
+}
+
+fn parse_edge_pairs(v: &Value, key: &str) -> Result<Vec<(VertexId, VertexId)>> {
+    let flat = v.get(key)?.as_arr()?;
+    if flat.len() % 2 != 0 {
+        bail!("checkpoint {key} array has odd length {}", flat.len());
+    }
+    let mut edges = Vec::with_capacity(flat.len() / 2);
+    for pair in flat.chunks_exact(2) {
+        let u = pair[0].as_usize()?;
+        let w = pair[1].as_usize()?;
+        if u > VertexId::MAX as usize || w > VertexId::MAX as usize {
+            bail!("checkpoint {key} edge ({u}, {w}) exceeds vertex id range");
+        }
+        edges.push((u as VertexId, w as VertexId));
+    }
+    Ok(edges)
 }
 
 #[cfg(test)]
@@ -190,6 +245,9 @@ mod tests {
             seq: 7,
             num_vertices: 3,
             edges: vec![(0, 1), (1, 2), (0, 0), (1, 1), (2, 2)],
+            // previous snapshot: had (2, 1), did not yet have (0, 1)
+            prev_missing: vec![(0, 1)],
+            prev_extra: vec![(2, 1)],
             ranks: Some(vec![0.25, 0.5, 0.25]),
             cfg: PagerankConfig::default().with_threads(2),
             metrics,
@@ -224,6 +282,23 @@ mod tests {
         for (x, y) in back.ranks.unwrap().iter().zip(cp.ranks.as_ref().unwrap()) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    #[test]
+    fn prev_delta_roundtrips_and_reconstructs() {
+        let cp = sample();
+        let back = Checkpoint::from_json(&cp.to_json()).unwrap();
+        assert_eq!(back.prev_missing, cp.prev_missing);
+        assert_eq!(back.prev_extra, cp.prev_extra);
+        assert_eq!(
+            back.prev_edges(),
+            vec![(0, 0), (1, 1), (1, 2), (2, 1), (2, 2)],
+            "previous snapshot = current − missing + extra, sorted"
+        );
+        // out-of-range delta edges are rejected like regular edges
+        let mut bad = sample();
+        bad.prev_extra.push((9, 0));
+        assert!(bad.validate().is_err());
     }
 
     #[test]

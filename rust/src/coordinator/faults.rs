@@ -35,6 +35,13 @@ pub enum Fault {
     /// Panic inside `apply_update` (models a wedged/crashed coordinator;
     /// the server supervisor must respawn from the last checkpoint).
     KillCoordinator,
+    /// Submit a parallel region with a panicking chunk to the persistent
+    /// worker pool (models a bug inside engine code running on the pool).
+    /// The pool itself survives — per-task unwind catching turns this into
+    /// a typed `par::PoolPanic` on the coordinator thread — so what the
+    /// suite asserts is that the *coordinator* crash is supervised and
+    /// respawned, and that the pool keeps serving afterwards.
+    PoisonPool,
 }
 
 impl Fault {
@@ -44,6 +51,7 @@ impl Fault {
             Fault::Stall => "stall",
             Fault::MalformedBatch { .. } => "malformed-batch",
             Fault::KillCoordinator => "kill-coordinator",
+            Fault::PoisonPool => "poison-pool",
         }
     }
 }

@@ -36,6 +36,7 @@ pub mod metrics;
 pub mod policy;
 pub mod server;
 
+use std::collections::HashSet;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -47,6 +48,7 @@ use crate::engines::device::DeviceEngine;
 use crate::engines::{native, Approach, PagerankResult};
 use crate::graph::{CsrGraph, GraphBuilder, VertexId};
 use crate::runtime::ArtifactStore;
+use crate::util::par;
 
 pub use checkpoint::Checkpoint;
 pub use faults::{Fault, FaultPlan};
@@ -131,7 +133,10 @@ impl DynamicGraphService {
             builder.insert_edge(u, v);
         }
         builder.ensure_self_loops();
-        let prev_csr = builder.to_csr();
+        // Rebuild the *previous* snapshot from the checkpointed delta so
+        // Dynamic Traversal (which BFS-marks over old ∪ new) stays exact
+        // across a restore instead of silently seeing old == new.
+        let prev_csr = CsrGraph::from_edges(cp.num_vertices, &cp.prev_edges());
         let mut metrics = cp.metrics.clone();
         metrics.record_restore();
         Ok(Self {
@@ -149,11 +154,24 @@ impl DynamicGraphService {
     }
 
     /// Snapshot the current state for later [`restore`](Self::restore).
+    /// Alongside the current edge list this records the delta to the
+    /// previous snapshot (`prev_missing` / `prev_extra`), so a restored
+    /// service reconstructs `prev_csr` exactly and DT keeps its old-graph
+    /// reachability after a respawn.
     pub fn checkpoint(&self) -> Checkpoint {
+        let edges: Vec<(VertexId, VertexId)> = self.builder.edges().collect();
+        let cur: HashSet<(VertexId, VertexId)> = edges.iter().copied().collect();
+        let prev: HashSet<(VertexId, VertexId)> = self.prev_csr.edges().collect();
+        let mut prev_missing: Vec<_> = cur.difference(&prev).copied().collect();
+        let mut prev_extra: Vec<_> = prev.difference(&cur).copied().collect();
+        prev_missing.sort_unstable();
+        prev_extra.sort_unstable();
         Checkpoint {
             seq: self.update_seq,
             num_vertices: self.builder.num_vertices(),
-            edges: self.builder.edges().collect(),
+            edges,
+            prev_missing,
+            prev_extra,
             ranks: self.ranks.clone(),
             cfg: self.cfg,
             metrics: self.metrics.clone(),
@@ -294,6 +312,29 @@ impl DynamicGraphService {
     /// a more conservative approach. On any error the last-known-good ranks
     /// stay installed and keep being served.
     pub fn apply_update(&mut self, batch: BatchUpdate) -> Result<UpdateReport> {
+        self.apply_update_impl(batch, None)
+    }
+
+    /// Like [`apply_update`](Self::apply_update), but with a caller-chosen
+    /// approach instead of the policy's pick. The policy never selects
+    /// Dynamic Traversal on its own (DF-P dominates it at every batch
+    /// size), so harnesses exercising DT — and callers pinning any other
+    /// approach — use this entry point. Validation, fault injection and the
+    /// watchdog ladder all still apply; a trip escalates from the forced
+    /// approach exactly as it would from a chosen one.
+    pub fn apply_update_with(
+        &mut self,
+        batch: BatchUpdate,
+        approach: Approach,
+    ) -> Result<UpdateReport> {
+        self.apply_update_impl(batch, Some(approach))
+    }
+
+    fn apply_update_impl(
+        &mut self,
+        batch: BatchUpdate,
+        force: Option<Approach>,
+    ) -> Result<UpdateReport> {
         let seq = self.update_seq;
         self.update_seq += 1;
 
@@ -312,6 +353,19 @@ impl DynamicGraphService {
                     batch.deletions.extend(junk.deletions);
                     batch.insertions.extend(junk.insertions);
                 }
+                Some(Fault::PoisonPool) => {
+                    // Submit a parallel region whose first chunk panics.
+                    // The worker pool survives (per-task catch_unwind), but
+                    // the submitting coordinator thread observes the typed
+                    // `par::PoolPanic` — the supervisor must respawn it
+                    // like any other coordinator crash.
+                    let mut buf = vec![0u8; 4 * par::DEFAULT_BLOCK];
+                    par::par_for(2, par::DEFAULT_BLOCK, &mut buf, |start, _| {
+                        if start == 0 {
+                            panic!("injected fault: poisoned pool region at update {seq}");
+                        }
+                    });
+                }
                 Some(f) => result_fault = Some(f),
                 None => {}
             }
@@ -329,8 +383,9 @@ impl DynamicGraphService {
         let g = self.builder.to_csr();
         let gt = g.transpose();
 
-        let mut approach =
-            self.policy.choose(clean.len(), g.num_edges(), self.ranks.is_some());
+        let mut approach = force.unwrap_or_else(|| {
+            self.policy.choose(clean.len(), g.num_edges(), self.ranks.is_some())
+        });
         let mut trips = 0usize;
         // Degradation ladder: re-run with a more conservative approach until
         // the watchdog accepts the result (at most 3 runs: DF-P → ND →

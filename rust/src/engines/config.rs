@@ -42,11 +42,20 @@ pub struct PagerankConfig {
     pub tau_prune: f64,
     /// MAX_ITERATIONS (paper: 500).
     pub max_iterations: usize,
-    /// Worker threads for the native engines' scoped-thread pool
-    /// (`util::par`). `0` (the default) means "all available cores";
-    /// `1` runs the same blocked loops inline (sequential). Results are
-    /// bit-identical at every setting — see `util::par`.
+    /// Worker lanes for the native engines' parallel regions (`util::par`).
+    /// `0` (the default) means "all available cores" (overridable with the
+    /// `PAGERANK_THREADS` environment variable); `1` runs the same blocked
+    /// loops inline (sequential). Results are bit-identical at every
+    /// setting — see `util::par`.
     pub threads: usize,
+    /// `true` (the default): parallel regions run on the lazily-initialized
+    /// persistent work-stealing pool, amortizing thread spawns and letting
+    /// idle lanes steal skewed hub/frontier chunks. `false`: per-region
+    /// scoped spawning with static round-robin lanes (the pre-pool
+    /// behavior, kept as an escape hatch and as the equivalence reference
+    /// for `tests/pool_determinism.rs`). Ranks are bitwise identical either
+    /// way; only wall-clock changes.
+    pub pool_persistent: bool,
 }
 
 impl Default for PagerankConfig {
@@ -58,6 +67,7 @@ impl Default for PagerankConfig {
             tau_prune: 1e-6,
             max_iterations: 500,
             threads: 0,
+            pool_persistent: true,
         }
     }
 }
@@ -72,6 +82,12 @@ impl PagerankConfig {
     /// This configuration with an explicit native-pool thread count.
     pub fn with_threads(self, threads: usize) -> Self {
         Self { threads, ..self }
+    }
+
+    /// This configuration with the persistent stealing pool enabled
+    /// (`true`, the default) or the legacy per-region spawn path (`false`).
+    pub fn with_pool_persistent(self, pool_persistent: bool) -> Self {
+        Self { pool_persistent, ..self }
     }
 
     /// Check every field for values no engine can run with (NaN tolerances,
@@ -119,6 +135,7 @@ impl PagerankConfig {
                 self.max_iterations
             },
             threads: self.threads,
+            pool_persistent: self.pool_persistent,
         }
     }
 }
@@ -136,6 +153,7 @@ mod tests {
         assert_eq!(c.tau_prune, 1e-6);
         assert_eq!(c.max_iterations, 500);
         assert_eq!(c.threads, 0, "0 = use available parallelism");
+        assert!(c.pool_persistent, "persistent stealing pool is the default");
         assert!(crate::util::par::resolve(c.threads) >= 1);
     }
 
@@ -144,6 +162,9 @@ mod tests {
         let c = PagerankConfig::default().with_threads(4);
         assert_eq!(c.threads, 4);
         assert_eq!(c.alpha, 0.85);
+        let c = c.with_pool_persistent(false);
+        assert!(!c.pool_persistent);
+        assert_eq!(c.threads, 4, "other fields untouched");
     }
 
     #[test]
@@ -172,6 +193,7 @@ mod tests {
             tau_prune: f64::INFINITY,
             max_iterations: 0,
             threads: 3,
+            pool_persistent: false,
         }
         .sanitized();
         assert!(c.validate().is_ok());
@@ -181,6 +203,7 @@ mod tests {
         assert_eq!(c.tau_prune, 1e-6);
         assert_eq!(c.max_iterations, 500);
         assert_eq!(c.threads, 3);
+        assert!(!c.pool_persistent, "mode knob passes through untouched");
         let good = PagerankConfig::default().with_threads(2);
         assert_eq!(good.sanitized(), good, "valid config untouched");
     }

@@ -4,11 +4,15 @@
 //! out-neighbors of every δ_N vertex get δ_V set. The parallel variant
 //! partitions the graph's *edge array* into fixed [`EXPAND_EDGE_BLOCK`]-sized
 //! ranges (out-degree partitioning: a hub's out-edges span many blocks and
-//! are pushed by many threads), each thread marking into its own private
-//! flag buffer, which are OR-merged after the barrier. Flag stores are
-//! idempotent (`= 1`), so the merge — and therefore the result — is
-//! independent of thread count and scheduling, with no atomics and no
-//! shared-buffer races.
+//! are pushed by many lanes) and runs them as tasks on the work-stealing
+//! pool, every lane marking directly into a shared `AtomicU8` view of δ_V.
+//! The only store is an idempotent `1`, so the final flag set is the OR of
+//! the per-range marks regardless of which worker runs (or steals) a range
+//! — the result is independent of thread count and schedule, and the
+//! skewed hub ranges that used to load-imbalance a static round-robin
+//! assignment are simply stolen by idle lanes.
+
+use std::sync::atomic::{AtomicU8, Ordering};
 
 use crate::batch::BatchUpdate;
 use crate::graph::CsrGraph;
@@ -18,8 +22,8 @@ use crate::util::par;
 /// thread count, so the work decomposition is reproducible).
 pub(crate) const EXPAND_EDGE_BLOCK: usize = 8192;
 
-/// Below this many edges the per-thread buffer setup costs more than the
-/// push itself; run the sequential loop.
+/// Below this many edges the region submission costs more than the push
+/// itself; run the sequential loop.
 const EXPAND_PAR_CUTOFF: usize = 1 << 14;
 
 /// Algorithm 5 `initialAffected`: for each deletion (u,v), u's out-neighbors
@@ -51,10 +55,12 @@ pub fn expand_affected(dv: &mut [u8], dn: &[u8], g: &CsrGraph) {
     }
 }
 
-/// Algorithm 5 `expandAffected` on the scoped-thread pool. Bit-identical to
-/// [`expand_affected`] at every `threads` setting (flags are 0/1 and stores
-/// are idempotent); falls back to the sequential loop for one thread or
-/// small graphs.
+/// Algorithm 5 `expandAffected` on the work-stealing pool. Bit-identical to
+/// [`expand_affected`] at every `threads` setting and steal schedule: the
+/// fixed edge ranges depend only on the graph, pre-set δ_V flags are never
+/// cleared, and the only concurrent store is an idempotent relaxed `1` into
+/// a shared atomic view of δ_V. Falls back to the sequential loop for one
+/// thread or small graphs.
 pub fn expand_affected_threads(dv: &mut [u8], dn: &[u8], g: &CsrGraph, threads: usize) {
     let threads = par::resolve(threads);
     let m = g.num_edges();
@@ -62,54 +68,28 @@ pub fn expand_affected_threads(dv: &mut [u8], dn: &[u8], g: &CsrGraph, threads: 
         expand_affected(dv, dn, g);
         return;
     }
-    let n = g.num_vertices();
     let offsets = g.offsets();
     let targets = g.targets();
-    let num_blocks = m.div_ceil(EXPAND_EDGE_BLOCK);
 
-    // push phase: fixed edge ranges round-robin across threads, each thread
-    // marking a private buffer
-    let locals: Vec<Vec<u8>> = std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(threads);
-        for t in 0..threads {
-            handles.push(s.spawn(move || {
-                let mut local = vec![0u8; n];
-                let mut bi = t;
-                while bi < num_blocks {
-                    let lo = bi * EXPAND_EDGE_BLOCK;
-                    let hi = (lo + EXPAND_EDGE_BLOCK).min(m);
-                    // last row whose edge range starts at or before lo
-                    let mut row = offsets.partition_point(|&o| (o as usize) <= lo) - 1;
-                    let mut idx = lo;
-                    while idx < hi {
-                        let row_end = (offsets[row + 1] as usize).min(hi);
-                        if dn[row] != 0 {
-                            for &v in &targets[idx..row_end] {
-                                local[v as usize] = 1;
-                            }
-                        }
-                        idx = row_end;
-                        row += 1;
-                    }
-                    bi += threads;
-                }
-                local
-            }));
-        }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("expand worker panicked"))
-            .collect()
-    });
+    // SAFETY: AtomicU8 has the same in-memory representation as u8, and the
+    // exclusive borrow of `dv` is held for the whole region — reinterpreting
+    // it as a shared atomic view is sound, and the pool's completion barrier
+    // orders every mark before the caller reads `dv` again.
+    let flags: &[AtomicU8] = unsafe { &*(dv as *mut [u8] as *const [AtomicU8]) };
 
-    // OR-merge after the barrier (blocked over δ_V; idempotent stores)
-    par::par_for(threads, par::DEFAULT_BLOCK, dv, |start, out| {
-        for local in &locals {
-            for (i, slot) in out.iter_mut().enumerate() {
-                if local[start + i] != 0 {
-                    *slot = 1;
+    par::par_for_index(threads, EXPAND_EDGE_BLOCK, m, |lo, hi| {
+        // last row whose edge range starts at or before lo
+        let mut row = offsets.partition_point(|&o| (o as usize) <= lo) - 1;
+        let mut idx = lo;
+        while idx < hi {
+            let row_end = (offsets[row + 1] as usize).min(hi);
+            if dn[row] != 0 {
+                for &v in &targets[idx..row_end] {
+                    flags[v as usize].store(1, Ordering::Relaxed);
                 }
             }
+            idx = row_end;
+            row += 1;
         }
     });
 }

@@ -1,12 +1,12 @@
 //! Native DT / DF / DF-P PageRank (paper Algorithms 2-3, CPU substrate).
 //!
-//! Both approaches run their vertex passes on the scoped-thread pool with
-//! the same degree split as the static engine (low in-degree vertices
-//! blocked across threads, hubs via fixed-chunk partial sums), and DF/DF-P
-//! expand the frontier with the parallel push of
-//! [`expand_affected_threads`]. Decompositions are thread-count invariant,
-//! so ranks and iteration counts are bit-identical at every `threads`
-//! setting.
+//! Both approaches run their vertex passes on the persistent work-stealing
+//! pool with the same degree split as the static engine (low in-degree
+//! vertices blocked across lanes, hubs via fixed-chunk partial sums written
+//! into chunk-indexed slots), and DF/DF-P expand the frontier with the
+//! stealing push of [`expand_affected_threads`]. Decompositions are
+//! thread-count and schedule invariant, so ranks and iteration counts are
+//! bit-identical at every `threads` setting and under every steal order.
 
 use std::time::Instant;
 
@@ -30,6 +30,7 @@ pub fn dynamic_traversal(
 ) -> PagerankResult {
     let n = g.num_vertices();
     let start = Instant::now();
+    let _mode = par::push_mode(par::mode_for(cfg.pool_persistent));
     let threads = par::resolve(cfg.threads);
     let plan = StepPlan::build(gt, threads);
     let aff = dt_affected(g, g_old, batch);
@@ -143,6 +144,7 @@ pub fn dynamic_frontier(
 ) -> PagerankResult {
     let n = g.num_vertices();
     let start = Instant::now();
+    let _mode = par::push_mode(par::mode_for(cfg.pool_persistent));
     let threads = par::resolve(cfg.threads);
     let plan = StepPlan::build(gt, threads);
 

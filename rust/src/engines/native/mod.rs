@@ -4,21 +4,24 @@
 //!
 //! All five approaches use the same synchronous pull-based formulation as
 //! the device engines: two rank vectors, one write per vertex per
-//! iteration, L∞ convergence detection. Iterations run on the scoped-thread
-//! work pool (`util::par`, thread count from [`PagerankConfig::threads`])
-//! with the paper's two-kernel degree split (Algorithm 4 via
-//! `graph::partition::partition_by_degree`):
+//! iteration, L∞ convergence detection. Iterations run on the persistent
+//! work-stealing pool (`util::par`, lane count from
+//! [`PagerankConfig::threads`], strategy from
+//! [`PagerankConfig::pool_persistent`]) with the paper's two-kernel degree
+//! split (Algorithm 4 via `graph::partition::partition_by_degree`):
 //!
-//! * **low in-degree** vertices are chunked across threads in fixed vertex
+//! * **low in-degree** vertices are chunked across lanes in fixed vertex
 //!   blocks, each vertex's in-neighbor sum accumulated left-to-right;
-//! * **hub** vertices (in-degree > [`HUB_IN_DEGREE`]) get per-thread
-//!   partial sums over *fixed* [`HUB_EDGE_CHUNK`]-sized in-edge ranges,
-//!   combined in fixed chunk order.
+//! * **hub** vertices (in-degree > [`HUB_IN_DEGREE`]) get partial sums
+//!   over *fixed* [`HUB_EDGE_CHUNK`]-sized in-edge ranges, combined in
+//!   fixed chunk order — a lane that finishes its dealt chunks steals the
+//!   rest, so skewed hub distributions no longer serialize the step.
 //!
 //! Because the blocking is a function of the graph only — never of the
-//! thread count — ranks are bit-identical at every `threads` setting, and
-//! `threads = 1` runs the same loops inline (no atomics anywhere on the
-//! rank path).
+//! thread count or the steal schedule — and every partial lands in a
+//! chunk-indexed slot reduced in fixed order, ranks are bit-identical at
+//! every `threads` setting, and `threads = 1` runs the same loops inline
+//! (no atomics anywhere on the rank path).
 //!
 //! Dead ends: a vertex with no out-edges would divide by zero in the
 //! contribution pass (the paper sidesteps this by inserting self-loops at
@@ -211,6 +214,7 @@ pub fn static_pagerank(
 ) -> PagerankResult {
     let n = g.num_vertices();
     let start = Instant::now();
+    let _mode = par::push_mode(par::mode_for(cfg.pool_persistent));
     let threads = par::resolve(cfg.threads);
     let plan = StepPlan::build(gt, threads);
 

@@ -6,14 +6,15 @@
 //! [`CsrGraph::transpose`] produces the other.
 //!
 //! The edge-list and transpose builders run their counting and placement
-//! passes on the scoped-thread pool (`util::par`): each thread histograms a
-//! contiguous edge range, a single fused pass turns the per-thread
-//! histograms into row offsets and per-thread write cursors, and placement
-//! scatters through [`par::DisjointWriter`] (every edge has a unique
-//! precomputed slot). Because the ranges are contiguous and ascending, each
-//! row's neighbor order is the original edge order — the output is
-//! *identical* (not just equivalent) to the sequential build at every
-//! thread count.
+//! passes on the persistent work-stealing pool (`util::par`): each lane
+//! histograms a contiguous edge range, a single fused pass turns the
+//! per-lane histograms into row offsets and per-lane write cursors, and
+//! placement scatters through [`par::DisjointWriter`] (every edge has a
+//! unique precomputed slot). The lane→range mapping is fixed by the input
+//! size, so whichever worker steals a lane's task produces the same
+//! cursors: each row's neighbor order is the original edge order and the
+//! output is *identical* (not just equivalent) to the sequential build at
+//! every thread count.
 
 use super::VertexId;
 use crate::util::par;
@@ -84,35 +85,33 @@ impl CsrGraph {
         let chunk = edges.len().div_ceil(threads);
         let lanes = edges.len().div_ceil(chunk);
 
-        // parallel counting: one histogram per contiguous edge range
+        // parallel counting: one histogram per contiguous edge range, one
+        // pool task per lane (block = n aligns par_for's chunks with the
+        // per-lane histograms)
         let mut hists = vec![0u64; lanes * n];
-        std::thread::scope(|s| {
-            for (hist, part) in hists.chunks_mut(n).zip(edges.chunks(chunk)) {
-                s.spawn(move || {
-                    for &(u, _) in part {
-                        hist[u as usize] += 1;
-                    }
-                });
+        par::par_for(threads, n, &mut hists, |start, hist| {
+            let lo = (start / n) * chunk;
+            let hi = (lo + chunk).min(edges.len());
+            for &(u, _) in &edges[lo..hi] {
+                hist[u as usize] += 1;
             }
         });
 
         let mut offsets = vec![0u64; n + 1];
         cursors_from_histograms(n, &mut hists, &mut offsets);
 
-        // parallel placement: each thread replays its range against its own
+        // parallel placement: each lane replays its range against its own
         // cursors; slots are disjoint by construction
         let mut targets = vec![0 as VertexId; edges.len()];
         let writer = par::DisjointWriter::new(&mut targets);
         let writer = &writer;
-        std::thread::scope(|s| {
-            for (hist, part) in hists.chunks_mut(n).zip(edges.chunks(chunk)) {
-                s.spawn(move || {
-                    for &(u, v) in part {
-                        let c = &mut hist[u as usize];
-                        unsafe { writer.write(*c as usize, v) };
-                        *c += 1;
-                    }
-                });
+        par::par_for(threads, n, &mut hists, |start, hist| {
+            let lo = (start / n) * chunk;
+            let hi = (lo + chunk).min(edges.len());
+            for &(u, v) in &edges[lo..hi] {
+                let c = &mut hist[u as usize];
+                unsafe { writer.write(*c as usize, v) };
+                *c += 1;
             }
         });
         Self { offsets, targets }
@@ -189,46 +188,40 @@ impl CsrGraph {
         let lanes = m.div_ceil(chunk);
 
         // parallel counting over contiguous target ranges
+        let targets = &self.targets;
         let mut hists = vec![0u64; lanes * n];
-        std::thread::scope(|s| {
-            for (hist, part) in hists.chunks_mut(n).zip(self.targets.chunks(chunk)) {
-                s.spawn(move || {
-                    for &v in part {
-                        hist[v as usize] += 1;
-                    }
-                });
+        par::par_for(threads, n, &mut hists, |start, hist| {
+            let lo = (start / n) * chunk;
+            let hi = (lo + chunk).min(m);
+            for &v in &targets[lo..hi] {
+                hist[v as usize] += 1;
             }
         });
 
         let mut toffsets = vec![0u64; n + 1];
         cursors_from_histograms(n, &mut hists, &mut toffsets);
 
-        // parallel placement: each thread walks its edge range, recovering
+        // parallel placement: each lane walks its edge range, recovering
         // the source row from the forward offsets
         let offsets = &self.offsets;
-        let targets = &self.targets;
         let mut ttargets = vec![0 as VertexId; m];
         let writer = par::DisjointWriter::new(&mut ttargets);
         let writer = &writer;
-        std::thread::scope(|s| {
-            for (li, hist) in hists.chunks_mut(n).enumerate() {
-                s.spawn(move || {
-                    let lo = li * chunk;
-                    let hi = (lo + chunk).min(m);
-                    // last row whose edge range starts at or before lo
-                    let mut row = offsets.partition_point(|&o| (o as usize) <= lo) - 1;
-                    let mut idx = lo;
-                    while idx < hi {
-                        let row_end = (offsets[row + 1] as usize).min(hi);
-                        for &v in &targets[idx..row_end] {
-                            let c = &mut hist[v as usize];
-                            unsafe { writer.write(*c as usize, row as VertexId) };
-                            *c += 1;
-                        }
-                        idx = row_end;
-                        row += 1;
-                    }
-                });
+        par::par_for(threads, n, &mut hists, |start, hist| {
+            let lo = (start / n) * chunk;
+            let hi = (lo + chunk).min(m);
+            // last row whose edge range starts at or before lo
+            let mut row = offsets.partition_point(|&o| (o as usize) <= lo) - 1;
+            let mut idx = lo;
+            while idx < hi {
+                let row_end = (offsets[row + 1] as usize).min(hi);
+                for &v in &targets[idx..row_end] {
+                    let c = &mut hist[v as usize];
+                    unsafe { writer.write(*c as usize, row as VertexId) };
+                    *c += 1;
+                }
+                idx = row_end;
+                row += 1;
             }
         });
         CsrGraph { offsets: toffsets, targets: ttargets }

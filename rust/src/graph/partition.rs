@@ -9,11 +9,13 @@
 //! between the ELL ("thread-per-vertex") and hub-chunk ("block-per-vertex")
 //! kernels.
 //!
-//! On the scoped-thread pool, populate and placement are blocked
-//! parallel-for passes and the scan is the classic three-phase blocked
-//! exclusive scan (per-chunk totals in parallel, a sequential scan over the
-//! chunk totals, then parallel per-chunk offset scans). All arithmetic is
-//! integral, so the result is identical at every thread count.
+//! On the persistent work-stealing pool, populate and placement are
+//! blocked parallel-for passes and the scan is the classic three-phase
+//! blocked exclusive scan (per-chunk totals in parallel, a sequential scan
+//! over the chunk totals, then parallel per-chunk offset scans). All
+//! arithmetic is integral and chunk boundaries depend only on the input
+//! size, so the result is identical at every thread count and under every
+//! steal schedule.
 
 use super::VertexId;
 use crate::util::par;
@@ -60,33 +62,35 @@ pub(crate) fn exclusive_scan_threads(buf: &mut [u64], threads: usize) -> u64 {
         return exclusive_scan(buf);
     }
     let chunk = buf.len().div_ceil(threads);
+    let nchunks = buf.len().div_ceil(chunk);
 
-    let mut totals: Vec<u64> = std::thread::scope(|s| {
-        let handles: Vec<_> = buf
-            .chunks(chunk)
-            .map(|part| s.spawn(move || part.iter().sum::<u64>()))
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("scan worker")).collect()
-    });
+    // phase 1: per-chunk totals, one pool task per chunk
+    let mut totals = vec![0u64; nchunks];
+    {
+        let buf = &*buf;
+        par::par_for(threads, 1, &mut totals, |start, slot| {
+            let lo = start * chunk;
+            let hi = (lo + chunk).min(buf.len());
+            slot[0] = buf[lo..hi].iter().sum();
+        });
+    }
     let total = exclusive_scan(&mut totals);
 
-    std::thread::scope(|s| {
-        for (part, &seed) in buf.chunks_mut(chunk).zip(totals.iter()) {
-            s.spawn(move || {
-                let mut acc = seed;
-                for x in part.iter_mut() {
-                    let v = *x;
-                    *x = acc;
-                    acc += v;
-                }
-            });
+    // phase 3: rescan each chunk seeded with its offset (par_for's blocks
+    // coincide with the phase-1 chunks because block = chunk)
+    par::par_for(threads, chunk, buf, |start, part| {
+        let mut acc = totals[start / chunk];
+        for x in part.iter_mut() {
+            let v = *x;
+            *x = acc;
+            acc += v;
         }
     });
     total
 }
 
 /// Partition vertex ids by `degrees[v] <= threshold` (Algorithm 4) on the
-/// scoped-thread pool (`threads = 0` means all cores; small inputs and
+/// work-stealing pool (`threads = 0` means all cores; small inputs and
 /// `threads = 1` run the same passes sequentially, with identical results).
 pub fn partition_by_degree_threads(
     degrees: &[u32],

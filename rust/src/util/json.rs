@@ -54,6 +54,13 @@ impl Value {
         }
         Ok(x as usize)
     }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("not a boolean"),
+        }
+    }
 }
 
 /// Parse a JSON document.

@@ -1,20 +1,51 @@
-//! Scoped-thread work pool for the native engines (std-only; offline build
-//! has no rayon). The primitives here share one design rule: **the work
-//! decomposition is a function of the input size only, never of the thread
-//! count**. Blocks have a fixed size, each block's result is computed by
-//! exactly one thread, and per-block partials are reduced in ascending
-//! block order. Floating-point results are therefore bit-identical at every
-//! thread count — `threads = 1` runs the same blocked loops inline — and
-//! the rank path needs no atomics (matching the paper's atomics-free GPU
-//! design).
+//! Parallel substrate for the native engines (std-only; the offline build
+//! has no rayon): blocked `par_for`/`par_reduce` primitives running on a
+//! lazily-initialized **persistent work-stealing pool**.
 //!
-//! Threads are spawned per parallel region with [`std::thread::scope`],
-//! which lets closures borrow the caller's slices directly. Blocks are
-//! dealt to lanes round-robin (block `i` → lane `i mod threads`), a static
-//! schedule that keeps the region barrier-light; an amortized persistent
-//! pool is a recorded follow-on (ROADMAP "Open items").
+//! ## Determinism
+//!
+//! The primitives share one design rule: **the work decomposition is a
+//! function of the input size only, never of the thread count or the
+//! schedule**. Blocks have a fixed size, each block runs exactly once, and
+//! per-block partials are written into a *chunk-indexed* buffer and folded
+//! in ascending block order after the region. Execution order is thereby
+//! separated from reduction order: a block may run on any worker (including
+//! stolen mid-region), yet floating-point results are bit-identical at
+//! every thread count and under every steal schedule — `threads = 1` runs
+//! the same blocked loops inline — and the rank path needs no atomics
+//! (matching the paper's atomics-free GPU design).
+//!
+//! ## The pool
+//!
+//! Workers are spawned once (first parallel region) and parked on a
+//! condvar. A region is submitted as an epoch-stamped job: task indices are
+//! dealt into per-lane deques in contiguous runs, the submitting thread
+//! takes lane 0, and workers `i` take lane `i + 1` (so a region asking for
+//! `t` threads uses exactly `t` lanes, preserving the thread-scaling
+//! sweeps). Each lane pops its own deque LIFO and, when empty, steals FIFO
+//! from the other lanes in ring order — idle lanes drain the skewed hub and
+//! frontier partitions instead of waiting at the barrier. The submitter
+//! always participates, so regions complete even with zero workers (1-core
+//! hosts) or when every worker is busy with a concurrent submitter's job.
+//!
+//! A task closure that panics is caught in the worker (the pool survives);
+//! the submitter re-raises it as a typed [`PoolPanic`] payload after the
+//! region completes, so callers never deadlock on a poisoned region.
+//!
+//! The pre-pool behavior — scoped threads spawned per region, blocks dealt
+//! round-robin — is kept as [`ExecMode::Spawn`], selectable per-thread with
+//! [`push_mode`]; `tests/pool_determinism.rs` proves both paths bitwise
+//! equal to the sequential loops across engines, generators, and thread
+//! counts.
 
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::fmt;
 use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Duration;
 
 /// Default vertices-per-block granularity for rank-vector passes.
 pub const DEFAULT_BLOCK: usize = 2048;
@@ -24,12 +55,392 @@ pub fn available() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Resolve a configured thread count: `0` means "all available cores".
+/// Resolve a configured thread count: `0` means "all available cores",
+/// overridable with the `PAGERANK_THREADS` environment variable (used by
+/// ci.sh to run the whole suite at a pinned width). An explicit non-zero
+/// count always wins over the environment.
 pub fn resolve(threads: usize) -> usize {
-    if threads == 0 {
-        available()
+    if threads != 0 {
+        return threads;
+    }
+    if let Ok(s) = std::env::var("PAGERANK_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    available()
+}
+
+/// How parallel regions execute: on the persistent stealing pool, or with
+/// per-region scoped spawning (the pre-pool behavior, kept as the
+/// equivalence reference and as an escape hatch). Results are bitwise
+/// identical either way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Persistent workers + LIFO-local/FIFO-steal deques (default).
+    Persistent,
+    /// `std::thread::scope` per region, blocks dealt round-robin.
+    Spawn,
+}
+
+thread_local! {
+    static MODE: Cell<ExecMode> = const { Cell::new(ExecMode::Persistent) };
+}
+
+/// The execution mode regions submitted from this thread will use.
+pub fn current_mode() -> ExecMode {
+    MODE.with(Cell::get)
+}
+
+/// The mode implied by a config's `pool_persistent` knob.
+pub fn mode_for(pool_persistent: bool) -> ExecMode {
+    if pool_persistent {
+        ExecMode::Persistent
     } else {
-        threads
+        ExecMode::Spawn
+    }
+}
+
+/// Install `mode` for the current thread until the guard drops (engines
+/// scope this over a whole solve so every region inside — steps, graph
+/// builds, frontier expansion — runs the configured strategy).
+#[must_use = "the mode reverts when the guard drops"]
+pub fn push_mode(mode: ExecMode) -> ModeGuard {
+    let prev = MODE.with(|m| m.replace(mode));
+    ModeGuard { prev }
+}
+
+/// Restores the previously installed [`ExecMode`] on drop.
+pub struct ModeGuard {
+    prev: ExecMode,
+}
+
+impl Drop for ModeGuard {
+    fn drop(&mut self) {
+        MODE.with(|m| m.set(self.prev));
+    }
+}
+
+/// Typed panic payload re-raised by the submitter when one or more task
+/// closures panicked inside a parallel region. The pool itself survives
+/// (workers catch the unwind), every non-poisoned block still ran, and the
+/// caller's stack unwinds normally — no deadlocked barrier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolPanic {
+    /// Number of blocks whose closure panicked.
+    pub chunks: usize,
+}
+
+impl fmt::Display for PoolPanic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "parallel region poisoned: {} chunk{} panicked",
+            self.chunks,
+            if self.chunks == 1 { "" } else { "s" }
+        )
+    }
+}
+
+impl std::error::Error for PoolPanic {}
+
+static STRESS_SEED: AtomicU64 = AtomicU64::new(0);
+static STRESS_MAX_MICROS: AtomicU64 = AtomicU64::new(0);
+
+/// Test hook: delay every pool task by a seeded pseudo-random duration in
+/// `0..=max_micros` µs, skewing lane finish times to force steals.
+/// `(0, 0)` clears the hook. Delays cannot change results — that is the
+/// property `tests/pool_determinism.rs` stresses.
+pub fn set_stress_delay(seed: u64, max_micros: u64) {
+    STRESS_SEED.store(seed, Ordering::Relaxed);
+    STRESS_MAX_MICROS.store(max_micros, Ordering::Relaxed);
+}
+
+fn stress_delay(task: usize) {
+    let max = STRESS_MAX_MICROS.load(Ordering::Relaxed);
+    if max == 0 {
+        return;
+    }
+    // splitmix64 of (task, seed): deterministic per task, varied per seed
+    let mut x = (task as u64)
+        .wrapping_add(STRESS_SEED.load(Ordering::Relaxed))
+        .wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    std::thread::sleep(Duration::from_micros(x % (max + 1)));
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // Task panics are caught before any job lock is released poisoned, but
+    // recover anyway: a poisoned pool mutex must never wedge the engines.
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Lifetime-erased pointer to a region's task closure, passable to the
+/// long-lived workers. Soundness rests on the job protocol: the pointee is
+/// only dereferenced between a successful deque pop and the matching
+/// `Job::left` decrement, an interval during which the submitting caller —
+/// who owns the closure — is still blocked inside [`run_job`].
+struct TaskRef {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+fn task_ref<F: Fn(usize) + Sync>(f: &F) -> TaskRef {
+    unsafe fn call<F: Fn(usize) + Sync>(data: *const (), task: usize) {
+        let f = unsafe { &*(data as *const F) };
+        f(task);
+    }
+    TaskRef { data: (f as *const F).cast(), call: call::<F> }
+}
+
+type Deque = Mutex<VecDeque<usize>>;
+
+/// One parallel region: per-lane task deques plus the completion barrier.
+struct Job {
+    /// `width` deques; task indices dealt in contiguous runs. Lane `l` pops
+    /// its own deque back (LIFO), steals the others' fronts (FIFO).
+    queues: Vec<Deque>,
+    /// Tasks not yet finished; the submitter waits on `done` until zero.
+    left: Mutex<usize>,
+    done: Condvar,
+    /// Blocks whose closure panicked (caught in the worker).
+    panics: AtomicUsize,
+    task: TaskRef,
+}
+
+struct PoolState {
+    /// Bumped on every publish; parked workers wake when it moves.
+    epoch: u64,
+    /// The latest published job. A job overwritten here before its workers
+    /// picked it up is simply drained by its own submitter.
+    job: Option<Arc<Job>>,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work: Condvar,
+}
+
+struct Pool {
+    shared: Arc<PoolShared>,
+    workers: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { epoch: 0, job: None }),
+            work: Condvar::new(),
+        });
+        // The submitter is always lane 0, so `cores - 1` workers saturate
+        // the machine. Spawn failures are tolerated: regions still complete
+        // through the submitter, just with fewer helpers.
+        let workers = available().saturating_sub(1);
+        let mut spawned = 0;
+        for i in 0..workers {
+            let s = Arc::clone(&shared);
+            let ok = std::thread::Builder::new()
+                .name(format!("pagerank-par-{i}"))
+                .spawn(move || worker_loop(&s, i))
+                .is_ok();
+            spawned += usize::from(ok);
+        }
+        Pool { shared, workers: spawned }
+    })
+}
+
+/// Number of persistent workers backing the pool (0 on 1-core hosts; the
+/// submitting thread always adds one more lane). Forces pool creation.
+pub fn pool_workers() -> usize {
+    pool().workers
+}
+
+fn worker_loop(shared: &PoolShared, index: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock(&shared.state);
+            while st.epoch == seen {
+                st = shared
+                    .work
+                    .wait(st)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
+            seen = st.epoch;
+            st.job.clone()
+        };
+        // Worker i serves lane i+1; honoring the region's width keeps
+        // `threads = t` meaning *t* lanes even when more workers idle.
+        if let Some(job) = job {
+            if index + 1 < job.queues.len() {
+                run_tasks(&job, index + 1);
+            }
+        }
+    }
+}
+
+/// Drain tasks as lane `lane`: own deque LIFO, then FIFO-steal from the
+/// other lanes in ring order. Returns once no lane has work left.
+fn run_tasks(job: &Job, lane: usize) {
+    let width = job.queues.len();
+    loop {
+        let mut task = lock(&job.queues[lane]).pop_back();
+        if task.is_none() {
+            for k in 1..width {
+                task = lock(&job.queues[(lane + k) % width]).pop_front();
+                if task.is_some() {
+                    break;
+                }
+            }
+        }
+        let Some(t) = task else { return };
+        stress_delay(t);
+        // SAFETY: `left` stays >= 1 until this task is counted below, so
+        // the submitter is still parked in `run_job` and the closure it
+        // owns is alive. No job lock is held across the call, so a panic
+        // here poisons nothing.
+        let ok = catch_unwind(AssertUnwindSafe(|| unsafe {
+            (job.task.call)(job.task.data, t)
+        }))
+        .is_ok();
+        if !ok {
+            job.panics.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut left = lock(&job.left);
+        *left -= 1;
+        if *left == 0 {
+            job.done.notify_all();
+        }
+    }
+}
+
+/// Submit `ntasks` task indices across `width` lanes and run them to
+/// completion, the caller working as lane 0.
+fn run_job<F: Fn(usize) + Sync>(
+    width: usize,
+    ntasks: usize,
+    f: &F,
+) -> Result<(), PoolPanic> {
+    if ntasks == 0 {
+        return Ok(());
+    }
+    // Deal contiguous runs (not round-robin): a lane's LIFO pops then walk
+    // cache-adjacent blocks, and steals migrate whole runs of far blocks.
+    let base = ntasks / width;
+    let extra = ntasks % width;
+    let mut queues = Vec::with_capacity(width);
+    let mut next = 0usize;
+    for lane in 0..width {
+        let take = base + usize::from(lane < extra);
+        queues.push(Mutex::new((next..next + take).collect::<VecDeque<_>>()));
+        next += take;
+    }
+    let job = Arc::new(Job {
+        queues,
+        left: Mutex::new(ntasks),
+        done: Condvar::new(),
+        panics: AtomicUsize::new(0),
+        task: task_ref(f),
+    });
+
+    let p = pool();
+    {
+        let mut st = lock(&p.shared.state);
+        st.epoch = st.epoch.wrapping_add(1);
+        st.job = Some(Arc::clone(&job));
+        p.shared.work.notify_all();
+    }
+
+    run_tasks(&job, 0);
+
+    {
+        let mut left = lock(&job.left);
+        while *left > 0 {
+            left = job.done.wait(left).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    // Unpublish so parked workers stop holding the job alive; a concurrent
+    // submitter may already have replaced it — leave theirs untouched.
+    {
+        let mut st = lock(&p.shared.state);
+        if st.job.as_ref().is_some_and(|cur| Arc::ptr_eq(cur, &job)) {
+            st.job = None;
+        }
+    }
+
+    match job.panics.load(Ordering::Relaxed) {
+        0 => Ok(()),
+        chunks => Err(PoolPanic { chunks }),
+    }
+}
+
+/// Run `ntasks` independent tasks `f(task_index)` across `width` lanes,
+/// each index exactly once, honoring the thread's [`ExecMode`].
+fn execute<F: Fn(usize) + Sync>(width: usize, ntasks: usize, f: F) {
+    match current_mode() {
+        ExecMode::Persistent => {
+            if let Err(p) = run_job(width, ntasks, &f) {
+                // Propagate like the scoped-spawn path did, but typed.
+                std::panic::panic_any(p);
+            }
+        }
+        ExecMode::Spawn => execute_spawn(width, ntasks, &f),
+    }
+}
+
+/// Legacy executor: scoped threads per region, task `i` on lane
+/// `i mod width` (static round-robin, no stealing).
+fn execute_spawn<F: Fn(usize) + Sync>(width: usize, ntasks: usize, f: &F) {
+    std::thread::scope(|s| {
+        for t in 0..width.min(ntasks) {
+            s.spawn(move || {
+                let mut task = t;
+                while task < ntasks {
+                    f(task);
+                    task += width;
+                }
+            });
+        }
+    });
+}
+
+/// Shared view of a mutable slice cut into fixed-size blocks, handing block
+/// `i` to whichever lane runs task `i`. The executor guarantees each task
+/// index runs exactly once, so the aliased `&mut` blocks stay disjoint.
+struct SliceParts<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    block: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for SliceParts<'_, T> {}
+unsafe impl<T: Send> Sync for SliceParts<'_, T> {}
+
+impl<'a, T> SliceParts<'a, T> {
+    fn new(data: &'a mut [T], block: usize) -> Self {
+        Self { ptr: data.as_mut_ptr(), len: data.len(), block, _marker: PhantomData }
+    }
+
+    /// # Safety
+    /// Within one region, each `index` must be claimed by at most one
+    /// concurrent caller, and `index * block` must be in bounds.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn chunk(&self, index: usize) -> &mut [T] {
+        let lo = index * self.block;
+        debug_assert!(lo < self.len);
+        let hi = (lo + self.block).min(self.len);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo) }
     }
 }
 
@@ -51,33 +462,21 @@ where
         }
         return;
     }
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut lanes: Vec<Vec<(usize, &mut [T])>> =
-            (0..threads).map(|_| Vec::new()).collect();
-        for (bi, chunk) in data.chunks_mut(block).enumerate() {
-            lanes[bi % threads].push((bi * block, chunk));
-        }
-        for lane in lanes {
-            if lane.is_empty() {
-                continue;
-            }
-            s.spawn(move || {
-                for (start, chunk) in lane {
-                    f(start, chunk);
-                }
-            });
-        }
+    let ntasks = data.len().div_ceil(block);
+    let parts = SliceParts::new(data, block);
+    execute(threads, ntasks, |task| {
+        // SAFETY: the executor hands each task index to exactly one lane.
+        let chunk = unsafe { parts.chunk(task) };
+        f(task * block, chunk);
     });
 }
 
-type ReduceLane<'a, T> = Vec<(usize, &'a mut [T], &'a mut f64)>;
-
-/// Chunked parallel map-reduce: like [`par_for`], but `f` returns a per-block
-/// partial and the partials are folded with `combine` in ascending block
-/// order — a fixed-shape reduction, so the result is independent of thread
-/// count and scheduling (exactly so for `max`; for `+` the partial sums are
-/// over fixed blocks, hence also reproducible).
+/// Chunked parallel map-reduce: like [`par_for`], but `f` returns a
+/// per-block partial, written into a chunk-indexed slot and folded with
+/// `combine` in ascending block order after the region — a fixed-shape
+/// reduction, so the result is independent of thread count and schedule
+/// (exactly so for `max`; for `+` the partial sums are over fixed blocks,
+/// hence also reproducible under stealing).
 pub fn par_reduce<T, F>(
     threads: usize,
     block: usize,
@@ -101,32 +500,18 @@ where
             *slot = f(bi * block, chunk);
         }
     } else {
-        std::thread::scope(|s| {
-            let f = &f;
-            let mut lanes: Vec<ReduceLane<'_, T>> =
-                (0..threads).map(|_| Vec::new()).collect();
-            for (bi, (chunk, slot)) in
-                data.chunks_mut(block).zip(partials.iter_mut()).enumerate()
-            {
-                lanes[bi % threads].push((bi * block, chunk, slot));
-            }
-            for lane in lanes {
-                if lane.is_empty() {
-                    continue;
-                }
-                s.spawn(move || {
-                    for (start, chunk, slot) in lane {
-                        *slot = f(start, chunk);
-                    }
-                });
-            }
+        let parts = SliceParts::new(data, block);
+        let slots = SliceParts::new(&mut partials, 1);
+        execute(threads, nblocks, |task| {
+            // SAFETY: task indices are unique per region; data block `task`
+            // and partial slot `task` are each touched by one lane only.
+            let chunk = unsafe { parts.chunk(task) };
+            let slot = unsafe { slots.chunk(task) };
+            slot[0] = f(task * block, chunk);
         });
     }
     partials.into_iter().fold(init, combine)
 }
-
-type ReduceLane3<'a, A, B, C> =
-    Vec<(usize, &'a mut [A], &'a mut [B], &'a mut [C], &'a mut f64)>;
 
 /// Three-slice lockstep variant of [`par_reduce`]: the DF/DF-P vertex pass
 /// mutates the new rank vector and both flag vectors at the same index, so
@@ -164,37 +549,26 @@ where
             *slot = f(bi * block, ca, cb, cc);
         }
     } else {
-        std::thread::scope(|s| {
-            let f = &f;
-            let mut lanes: Vec<ReduceLane3<'_, A, B, C>> =
-                (0..threads).map(|_| Vec::new()).collect();
-            let it = a
-                .chunks_mut(block)
-                .zip(b.chunks_mut(block))
-                .zip(c.chunks_mut(block))
-                .zip(partials.iter_mut());
-            for (bi, (((ca, cb), cc), slot)) in it.enumerate() {
-                lanes[bi % threads].push((bi * block, ca, cb, cc, slot));
-            }
-            for lane in lanes {
-                if lane.is_empty() {
-                    continue;
-                }
-                s.spawn(move || {
-                    for (start, ca, cb, cc, slot) in lane {
-                        *slot = f(start, ca, cb, cc);
-                    }
-                });
-            }
+        let pa = SliceParts::new(a, block);
+        let pb = SliceParts::new(b, block);
+        let pc = SliceParts::new(c, block);
+        let slots = SliceParts::new(&mut partials, 1);
+        execute(threads, nblocks, |task| {
+            // SAFETY: unique task index ⇒ all four views are disjoint.
+            let ca = unsafe { pa.chunk(task) };
+            let cb = unsafe { pb.chunk(task) };
+            let cc = unsafe { pc.chunk(task) };
+            let slot = unsafe { slots.chunk(task) };
+            slot[0] = f(task * block, ca, cb, cc);
         });
     }
     partials.into_iter().fold(init, combine)
 }
 
 /// Blocked parallel-for over an index range `0..n` (no slice to chunk):
-/// `f(start, end)` is called once per fixed-size block, blocks dealt
-/// round-robin across the pool. `f` must only touch state that is disjoint
-/// per block (or use [`DisjointWriter`]).
+/// `f(start, end)` is called once per fixed-size block. `f` must only touch
+/// state that is disjoint per block, idempotent under concurrent marking
+/// (the atomic frontier flags), or routed through [`DisjointWriter`].
 pub fn par_for_index<F>(threads: usize, block: usize, n: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -209,21 +583,10 @@ where
         }
         return;
     }
-    std::thread::scope(|s| {
-        let f = &f;
-        for t in 0..threads {
-            s.spawn(move || {
-                let mut bi = t;
-                loop {
-                    let start = bi * block;
-                    if start >= n {
-                        break;
-                    }
-                    f(start, (start + block).min(n));
-                    bi += threads;
-                }
-            });
-        }
+    let ntasks = n.div_ceil(block);
+    execute(threads, ntasks, |task| {
+        let start = task * block;
+        f(start, (start + block).min(n));
     });
 }
 
@@ -372,5 +735,103 @@ mod tests {
             assert!(!seen[v as usize]);
             seen[v as usize] = true;
         }
+    }
+
+    #[test]
+    fn pool_and_spawn_modes_bitwise_equal() {
+        let vals: Vec<f64> = (0..30_000u64)
+            .map(|i| ((i.wrapping_mul(0x2545F4914F6CDD1D)) >> 12) as f64 / 1e15)
+            .collect();
+        let run = |mode| {
+            let _g = push_mode(mode);
+            let mut data = vals.clone();
+            par_reduce(7, 256, &mut data, 0.0, |a, b| a + b, |_, c| c.iter().sum())
+        };
+        let pool = run(ExecMode::Persistent);
+        let spawn = run(ExecMode::Spawn);
+        assert_eq!(pool.to_bits(), spawn.to_bits());
+    }
+
+    #[test]
+    fn mode_guard_restores_previous_mode() {
+        assert_eq!(current_mode(), ExecMode::Persistent);
+        {
+            let _a = push_mode(ExecMode::Spawn);
+            assert_eq!(current_mode(), ExecMode::Spawn);
+            {
+                let _b = push_mode(ExecMode::Persistent);
+                assert_eq!(current_mode(), ExecMode::Persistent);
+            }
+            assert_eq!(current_mode(), ExecMode::Spawn);
+        }
+        assert_eq!(current_mode(), ExecMode::Persistent);
+    }
+
+    #[test]
+    fn pool_survives_many_regions() {
+        // Exercise job handoff/reuse: many small regions back to back must
+        // all complete on the same persistent workers.
+        let mut data = vec![0u64; 40 * 97];
+        for round in 0..200u64 {
+            par_for(4, 97, &mut data, |_, chunk| {
+                for x in chunk.iter_mut() {
+                    *x += round;
+                }
+            });
+        }
+        let want: u64 = (0..200).sum();
+        assert!(data.iter().all(|&x| x == want));
+    }
+
+    #[test]
+    fn task_panic_is_typed_and_pool_stays_usable() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let mut data = vec![0u8; 6 * 512];
+            par_for(3, 512, &mut data, |start, _| {
+                if start == 512 {
+                    panic!("injected task panic");
+                }
+            });
+        }))
+        .unwrap_err();
+        let p = caught.downcast_ref::<PoolPanic>().expect("typed PoolPanic payload");
+        assert_eq!(p.chunks, 1);
+        assert!(p.to_string().contains("1 chunk panicked"));
+
+        // same pool, next region: clean run with correct results
+        let mut data = vec![0usize; 6 * 512];
+        par_for(3, 512, &mut data, |start, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = start + i;
+            }
+        });
+        assert!(data.iter().enumerate().all(|(i, &x)| x == i));
+    }
+
+    #[test]
+    fn stress_delays_never_change_results() {
+        let vals: Vec<f64> = (0..20_000u64)
+            .map(|i| ((i.wrapping_mul(0x9E3779B97F4A7C15)) >> 13) as f64 / 1e14)
+            .collect();
+        let base = {
+            let mut data = vals.clone();
+            par_reduce(1, 128, &mut data, 0.0, |a, b| a + b, |_, c| c.iter().sum())
+        };
+        for seed in [1u64, 42, 2026] {
+            set_stress_delay(seed, 40);
+            let mut data = vals.clone();
+            let got =
+                par_reduce(5, 128, &mut data, 0.0, |a, b| a + b, |_, c| c.iter().sum());
+            set_stress_delay(0, 0);
+            assert_eq!(got.to_bits(), base.to_bits(), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn resolve_honors_env_and_explicit_counts() {
+        assert_eq!(resolve(3), 3, "explicit count wins");
+        assert!(resolve(0) >= 1);
+        // pool introspection: worker count is cores - 1 (possibly 0)
+        assert_eq!(pool_workers(), available().saturating_sub(1));
     }
 }

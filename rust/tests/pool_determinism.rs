@@ -1,0 +1,164 @@
+//! Bitwise-equivalence harness for the persistent work-stealing pool.
+//!
+//! The contract under test (see `util::par`): work decomposition depends
+//! only on input size, partial results land in chunk-indexed slots, and
+//! reductions fold those slots in ascending order — so the *execution*
+//! schedule (which lane ran which chunk, in what order, stolen or not) can
+//! never leak into the f64 ranks. These tests pin that contract three ways:
+//!
+//! 1. every engine × generator × thread count × execution mode (persistent
+//!    pool vs legacy per-region scoped spawn) produces ranks bitwise equal
+//!    to the single-threaded run;
+//! 2. a seeded stress hook injecting per-chunk delays — forcing steals and
+//!    scrambling completion order — changes nothing;
+//! 3. a golden rank digest written per resolved thread count, diffed by
+//!    `ci.sh` across `PAGERANK_THREADS=1` and `PAGERANK_THREADS=8` runs.
+
+use std::fmt::Write as _;
+
+use pagerank_dynamic::batch::{self, BatchUpdate};
+use pagerank_dynamic::engines::native::dynamic::{dynamic_frontier, dynamic_traversal};
+use pagerank_dynamic::engines::native::{naive_dynamic, static_pagerank};
+use pagerank_dynamic::engines::PagerankResult;
+use pagerank_dynamic::generators::{chain, er, grid, rmat};
+use pagerank_dynamic::graph::GraphBuilder;
+use pagerank_dynamic::util::par;
+use pagerank_dynamic::{CsrGraph, PagerankConfig};
+
+/// Thread counts covering inline (1), fewer lanes than workers, a prime
+/// count that misaligns with chunk counts, and more lanes than most CI
+/// machines have cores (16 → guaranteed starvation + stealing).
+const THREADS: [usize; 5] = [1, 2, 3, 7, 16];
+
+fn generators() -> Vec<(&'static str, GraphBuilder)> {
+    vec![
+        // long dependency chains: worst case for static lane balance
+        ("chain", chain::generate(2_000, 40, 5)),
+        // uniform degree: the easy case, catches plain indexing bugs
+        ("grid", grid::generate(40, 50, 7)),
+        // random degrees around the mean
+        ("er", er::generate(2_500, 6.0, 11)),
+        // skewed web-like RMAT: hubs + stragglers, the stealing showcase
+        ("rmat-web", rmat::generate(12, 8.0, rmat::RmatParams::WEB, 13)),
+    ]
+}
+
+struct Scenario {
+    old_g: CsrGraph,
+    g: CsrGraph,
+    gt: CsrGraph,
+    prev: Vec<f64>,
+    upd: BatchUpdate,
+}
+
+/// Old graph → reference ranks → batch → new graph: everything the five
+/// approaches need, with the previous ranks computed single-threaded so
+/// every comparison starts from identical bits.
+fn scenario(mut b: GraphBuilder) -> Scenario {
+    b.ensure_self_loops();
+    let old_g = b.to_csr();
+    let old_gt = old_g.transpose();
+    let cfg = PagerankConfig::default().with_threads(1);
+    let prev = static_pagerank(&old_g, &old_gt, &cfg, None).ranks;
+    let upd = batch::random_batch(&b, 20, 0.7, 123);
+    batch::apply(&mut b, &upd);
+    let g = b.to_csr();
+    let gt = g.transpose();
+    Scenario { old_g, g, gt, prev, upd }
+}
+
+/// Run all five approaches of the paper against one scenario.
+fn run_all(sc: &Scenario, cfg: &PagerankConfig) -> Vec<(&'static str, PagerankResult)> {
+    vec![
+        ("static", static_pagerank(&sc.g, &sc.gt, cfg, None)),
+        ("nd", naive_dynamic(&sc.g, &sc.gt, cfg, &sc.prev)),
+        (
+            "dt",
+            dynamic_traversal(&sc.g, &sc.gt, &sc.old_g, cfg, &sc.prev, &sc.upd),
+        ),
+        ("df", dynamic_frontier(&sc.g, &sc.gt, cfg, &sc.prev, &sc.upd, false)),
+        ("dfp", dynamic_frontier(&sc.g, &sc.gt, cfg, &sc.prev, &sc.upd, true)),
+    ]
+}
+
+fn assert_bitwise(
+    tag: &str,
+    base: &[(&'static str, PagerankResult)],
+    got: &[(&'static str, PagerankResult)],
+) {
+    for ((name, b), (_, g)) in base.iter().zip(got) {
+        assert_eq!(b.iterations, g.iterations, "{tag}/{name}: iteration count");
+        assert_eq!(
+            b.initially_affected, g.initially_affected,
+            "{tag}/{name}: initially-affected count"
+        );
+        assert_eq!(b.ranks.len(), g.ranks.len(), "{tag}/{name}: rank length");
+        for (i, (x, y)) in b.ranks.iter().zip(&g.ranks).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{tag}/{name}: rank[{i}] diverged ({x} vs {y})"
+            );
+        }
+    }
+}
+
+/// The full matrix: engines × generators × thread counts × execution modes,
+/// every cell bitwise equal to the single-threaded persistent-pool run.
+#[test]
+fn every_engine_is_bitwise_identical_across_threads_and_modes() {
+    for (gname, b) in generators() {
+        let sc = scenario(b);
+        let base = run_all(&sc, &PagerankConfig::default().with_threads(1));
+        for &t in &THREADS {
+            for persistent in [true, false] {
+                let cfg = PagerankConfig::default()
+                    .with_threads(t)
+                    .with_pool_persistent(persistent);
+                let mode = if persistent { "pool" } else { "spawn" };
+                let got = run_all(&sc, &cfg);
+                assert_bitwise(&format!("{gname}/t{t}/{mode}"), &base, &got);
+            }
+        }
+    }
+}
+
+/// Seeded per-chunk delays scramble which lane finishes which chunk first,
+/// forcing steals in the middle of every region — results must not move.
+#[test]
+fn forced_steals_under_stress_delays_change_nothing() {
+    let sc = scenario(er::generate(30_000, 4.0, 21));
+    let base = run_all(&sc, &PagerankConfig::default().with_threads(1));
+    for seed in [1u64, 2026] {
+        par::set_stress_delay(seed, 60);
+        let got = run_all(&sc, &PagerankConfig::default().with_threads(7));
+        par::set_stress_delay(0, 0);
+        assert_bitwise(&format!("stress/seed{seed}"), &base, &got);
+    }
+}
+
+/// Write a digest of every engine's rank bits under the *resolved* thread
+/// count (so `PAGERANK_THREADS` applies). `ci.sh` runs the suite twice with
+/// the env pinned to 1 and 8 and diffs the two files: any schedule- or
+/// thread-dependent bit anywhere in the engine stack fails the gate.
+#[test]
+fn write_golden_rank_digest() {
+    let resolved = par::resolve(0);
+    let mut out = String::new();
+    for (gname, b) in generators() {
+        let sc = scenario(b);
+        for (ename, res) in run_all(&sc, &PagerankConfig::default()) {
+            let mut h: u64 = 0xcbf29ce484222325;
+            for x in &res.ranks {
+                for byte in x.to_bits().to_le_bytes() {
+                    h = (h ^ byte as u64).wrapping_mul(0x100000001b3);
+                }
+            }
+            let _ = writeln!(out, "{gname} {ename} {h:016x} iters={}", res.iterations);
+        }
+    }
+    // cwd of integration tests is the crate root (rust/); the workspace
+    // build dir lives at ../target, so rust/target is ours alone.
+    std::fs::create_dir_all("target").unwrap();
+    std::fs::write(format!("target/rank_digest_t{resolved}.txt"), out).unwrap();
+}

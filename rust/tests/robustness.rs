@@ -21,6 +21,7 @@ use pagerank_dynamic::engines::error::{l1_distance, reference_ranks};
 use pagerank_dynamic::engines::Approach;
 use pagerank_dynamic::generators::er;
 use pagerank_dynamic::graph::GraphBuilder;
+use pagerank_dynamic::util::par;
 use pagerank_dynamic::PagerankConfig;
 
 /// A warmed native-only service plus a shadow builder mirroring its graph.
@@ -229,6 +230,52 @@ fn checkpoint_json_roundtrip_restores_bit_exact_ranks() {
 }
 
 #[test]
+fn dt_stays_exact_across_checkpoint_restore() {
+    // Dynamic Traversal BFS-marks reachability over old ∪ new graph, so it
+    // is only exact if a restored service gets back the *true* previous
+    // snapshot — which the checkpoint carries as a delta (prev_missing /
+    // prev_extra), not a second edge list.
+    //
+    // 40-vertex chain 0→1→…→39. Cutting (20, 21) then inserting (5, 18)
+    // makes the distinction observable: the old graph still bridges the
+    // cut, so DT's exact affected set is {5..=39} (35 vertices). A restore
+    // that substituted the current graph for the previous one would stop
+    // at the cut (16 vertices) and converge to different bits.
+    let mut b = GraphBuilder::new(40);
+    for v in 0..39u32 {
+        b.insert_edge(v, v + 1);
+    }
+    let mut s = DynamicGraphService::new(b, None, PagerankConfig::default());
+    s.apply_update(BatchUpdate::default()).unwrap(); // seq 0: initial static
+    let cut = BatchUpdate { deletions: vec![(20, 21)], insertions: vec![] };
+    s.apply_update(cut).unwrap(); // seq 1: prev snapshot = uncut chain
+
+    let cp = s.checkpoint();
+    let mut restored = DynamicGraphService::restore(&cp, None).unwrap();
+
+    let b2 = BatchUpdate { deletions: vec![], insertions: vec![(5, 18)] };
+    let live = s
+        .apply_update_with(b2.clone(), Approach::DynamicTraversal)
+        .unwrap();
+    let resto = restored
+        .apply_update_with(b2, Approach::DynamicTraversal)
+        .unwrap();
+    assert_eq!(live.approach, Approach::DynamicTraversal);
+    assert_eq!(
+        live.initially_affected, 35,
+        "BFS crosses the cut through the old graph"
+    );
+    assert_eq!(
+        resto.initially_affected, live.initially_affected,
+        "restored DT sees the same previous snapshot"
+    );
+    assert_eq!(resto.iterations, live.iterations);
+    for (a, b) in restored.ranks().unwrap().iter().zip(s.ranks().unwrap()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "post-restore DT ranks bitwise equal");
+    }
+}
+
+#[test]
 fn restore_rejects_tampered_checkpoint() {
     let (s, _) = warm_service(100, 11);
     let mut cp = s.checkpoint();
@@ -289,6 +336,77 @@ fn supervisor_respawns_after_kill_and_keeps_serving() {
 
     let stats = h.stats().unwrap();
     assert!(stats.contains("restores=1"), "{stats}");
+}
+
+#[test]
+fn pool_task_panic_is_typed_and_leaves_pool_usable() {
+    // a panic inside a pool task must not deadlock the region or kill the
+    // workers: the submitter gets a typed PoolPanic after all chunks finish
+    let caught = std::panic::catch_unwind(|| {
+        let mut buf = vec![0u8; 3 * par::DEFAULT_BLOCK];
+        par::par_for(2, par::DEFAULT_BLOCK, &mut buf, |start, _| {
+            if start == 0 {
+                panic!("injected: chunk zero dies");
+            }
+        });
+    })
+    .unwrap_err();
+    let p = caught.downcast_ref::<par::PoolPanic>().expect("typed PoolPanic payload");
+    assert_eq!(p.chunks, 1);
+    assert!(p.to_string().contains("1 chunk panicked"), "{p}");
+
+    // the same pool serves the next region cleanly
+    let mut buf = vec![0u8; 3 * par::DEFAULT_BLOCK];
+    par::par_for(2, par::DEFAULT_BLOCK, &mut buf, |_, chunk| {
+        for x in chunk.iter_mut() {
+            *x = 1;
+        }
+    });
+    assert!(buf.iter().all(|&x| x == 1));
+}
+
+#[test]
+fn poisoned_pool_region_respawns_supervisor_and_recovers() {
+    // Fault::PoisonPool submits a parallel region whose first chunk panics.
+    // The coordinator thread dies on the typed PoolPanic; the supervisor
+    // must respawn it from the last checkpoint, and — critically — the
+    // persistent pool workers must have survived to serve the respawn.
+    let n = 400usize;
+    let base = er::generate(n, 5.0, 17);
+    let mut shadow = base.clone();
+    shadow.ensure_self_loops();
+    let plan = FaultPlan::new(37).at(2, Fault::PoisonPool);
+    let h = spawn_with(
+        move || {
+            let mut s = DynamicGraphService::new(base, None, PagerankConfig::default());
+            s.arm_faults(plan);
+            s
+        },
+        ServerConfig { queue_capacity: 8, checkpoint_every: 1, respawn_limit: 2 },
+    );
+
+    h.update(BatchUpdate::default()).unwrap(); // seq 0: initial static
+    let b1 = batch::random_batch(&shadow, 2, 0.8, 81);
+    batch::apply(&mut shadow, &b1);
+    h.update(b1).unwrap(); // seq 1 — checkpointed
+
+    // seq 2: the poisoned region. Typed drop, batch not applied anywhere.
+    let err = h.update(batch::random_batch(&shadow, 2, 0.8, 82)).unwrap_err();
+    assert_eq!(err, ServerError::Dropped);
+    assert_eq!(h.respawns(), 1);
+
+    // post-respawn updates run parallel regions on the surviving pool
+    let b3 = batch::random_batch(&shadow, 2, 0.8, 83);
+    batch::apply(&mut shadow, &b3);
+    let rep = h.update(b3).unwrap();
+    assert_ne!(rep.approach, Approach::Static, "respawned warm, not cold");
+
+    let g = shadow.to_csr();
+    let gt = g.transpose();
+    let truth = reference_ranks(&g, &gt);
+    let served = h.ranks_of((0..n as u32).collect()).unwrap();
+    let err = l1_distance(&served, &truth).unwrap();
+    assert!(err < 1e-6, "post-recovery L1 vs reference: {err}");
 }
 
 #[test]
