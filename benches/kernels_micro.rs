@@ -23,6 +23,7 @@ use pagerank_dynamic::runtime::artifacts::{lit_f64, lit_i32_2d, run};
 use pagerank_dynamic::runtime::exec::{buf_f64, buf_i32, exec1, GraphBufs};
 use pagerank_dynamic::runtime::ArtifactStore;
 use pagerank_dynamic::util::par;
+use pagerank_dynamic::util::simd::{self, SimdPolicy};
 use pagerank_dynamic::PagerankConfig;
 
 const REPEATS: usize = 7;
@@ -76,14 +77,18 @@ fn native_kernel_sweep() {
 
     for &t in &sweep {
         // per-iteration pull step: contrib + degree-partitioned rank update
-        // (full static run divided by its iteration count)
-        let c = cfg.with_threads(t);
-        let mut iters = 1usize;
-        let run_secs = bench_ns(|| {
-            let r = native::static_pagerank(&g, &gt, &c, None);
-            iters = r.iterations.max(1);
-        });
-        record("step_plain_iter", t, run_secs / iters as f64);
+        // (full static run divided by its iteration count), on each SIMD
+        // backend — ranks are bitwise identical, only wall-clock moves
+        for (suffix, simd) in [("_scalar", SimdPolicy::Scalar), ("_simd", SimdPolicy::Vector)]
+        {
+            let c = cfg.with_threads(t).with_simd(simd);
+            let mut iters = 1usize;
+            let run_secs = bench_ns(|| {
+                let r = native::static_pagerank(&g, &gt, &c, None);
+                iters = r.iterations.max(1);
+            });
+            record(&format!("step_plain_iter{suffix}"), t, run_secs / iters as f64);
+        }
 
         record("transpose", t, bench_ns(|| {
             std::hint::black_box(g.transpose_threads(t));
@@ -105,6 +110,35 @@ fn native_kernel_sweep() {
             affected::expand_affected_threads(&mut dv, &dn, &g, t);
             std::hint::black_box(dv);
         }));
+    }
+
+    // util::simd kernel micros, per backend (single lane, full arrays):
+    // the pull gather, the contribution pass, and the convergence norms —
+    // the rows ci reads to confirm the vector path is no slower than scalar
+    {
+        let mut backends = vec![("scalar", simd::Backend::Portable)];
+        if simd::detect() != simd::Backend::Portable {
+            backends.push(("simd", simd::detect()));
+        }
+        let values: Vec<f64> = (0..n).map(|v| 1.0 / (v + 1) as f64).collect();
+        let values2: Vec<f64> = (0..n).map(|v| 1.0 / (v + 2) as f64).collect();
+        let mut out = vec![0.0f64; n];
+        let targets = gt.targets();
+        let offsets = g.offsets();
+        for (bname, be) in backends {
+            record(&format!("gather_sum_{bname}"), 1, bench_ns(|| {
+                std::hint::black_box(simd::gather_sum(be, &values, targets));
+            }));
+            record(&format!("contrib_block_{bname}"), 1, bench_ns(|| {
+                std::hint::black_box(simd::contrib_block(be, offsets, &values, 0, &mut out));
+            }));
+            record(&format!("l1_{bname}"), 1, bench_ns(|| {
+                std::hint::black_box(simd::l1(be, &values, &values2));
+            }));
+            record(&format!("linf_{bname}"), 1, bench_ns(|| {
+                std::hint::black_box(simd::linf(be, &values, &values2));
+            }));
+        }
     }
 
     let json = format!(

@@ -17,22 +17,35 @@ fi
 echo "=== cargo build --release ==="
 cargo build --release
 
-# Determinism gate: the full suite runs twice with the worker-lane count
-# pinned via PAGERANK_THREADS. tests/pool_determinism.rs writes a digest of
-# every engine's rank bits to rust/target/rank_digest_t<N>.txt; any
-# schedule- or thread-count-dependent bit anywhere in the stack makes the
-# two files differ and fails the gate.
+# Determinism gate: the worker-lane count (PAGERANK_THREADS) and the SIMD
+# backend (PAGERANK_SIMD: 0 = portable scalar loops, 1 = detected vector
+# unit) are pinned per run. tests/pool_determinism.rs writes a digest of
+# every engine's rank bits to rust/target/rank_digest_t<N>_s<S>.txt; the
+# full suite runs on the two diagonal combos (t1/scalar, t8/vector) and
+# the determinism matrix alone fills in the off-diagonals, then all four
+# digests are diffed: any schedule-, thread-count- or instruction-path-
+# dependent bit anywhere in the stack fails the gate.
 rm -f rust/target/rank_digest_t*.txt
 
-echo "=== cargo test -q [PAGERANK_THREADS=1] (dev profile: debug assertions on) ==="
-PAGERANK_THREADS=1 cargo test -q
+echo "=== cargo test -q [PAGERANK_THREADS=1 PAGERANK_SIMD=0] (dev profile: debug assertions on) ==="
+PAGERANK_THREADS=1 PAGERANK_SIMD=0 cargo test -q
 
-echo "=== cargo test -q [PAGERANK_THREADS=8] ==="
-PAGERANK_THREADS=8 cargo test -q
+echo "=== cargo test -q [PAGERANK_THREADS=8 PAGERANK_SIMD=1] ==="
+PAGERANK_THREADS=8 PAGERANK_SIMD=1 cargo test -q
 
-echo "=== golden rank digest: t1 vs t8 ==="
-diff -u rust/target/rank_digest_t1.txt rust/target/rank_digest_t8.txt
-echo "rank digests identical across thread counts"
+echo "=== cargo test -q --test pool_determinism [PAGERANK_THREADS=1 PAGERANK_SIMD=1] ==="
+PAGERANK_THREADS=1 PAGERANK_SIMD=1 cargo test -q --test pool_determinism
+
+echo "=== cargo test -q --test pool_determinism [PAGERANK_THREADS=8 PAGERANK_SIMD=0] ==="
+PAGERANK_THREADS=8 PAGERANK_SIMD=0 cargo test -q --test pool_determinism
+
+echo "=== golden rank digest: threads {1,8} x simd {0,1} ==="
+for f in rust/target/rank_digest_t1_s1.txt \
+         rust/target/rank_digest_t8_s0.txt \
+         rust/target/rank_digest_t8_s1.txt; do
+    diff -u rust/target/rank_digest_t1_s0.txt "$f"
+done
+echo "rank digests identical across thread counts and SIMD backends"
 
 echo "=== cargo test -q --test robustness (fault-injection suite) ==="
 cargo test -q --test robustness

@@ -96,7 +96,7 @@ impl Checkpoint {
         let mut s = String::with_capacity(32 + self.edges.len() * 8);
         let _ = write!(
             s,
-            "{{\"format\":1,\"seq\":{},\"num_vertices\":{},\"cfg\":{{\"alpha\":{},\"tau\":{},\"tau_frontier\":{},\"tau_prune\":{},\"max_iterations\":{},\"threads\":{},\"pool_persistent\":{}}}",
+            "{{\"format\":1,\"seq\":{},\"num_vertices\":{},\"cfg\":{{\"alpha\":{},\"tau\":{},\"tau_frontier\":{},\"tau_prune\":{},\"max_iterations\":{},\"threads\":{},\"pool_persistent\":{},\"simd\":\"{}\"}}",
             self.seq,
             self.num_vertices,
             self.cfg.alpha,
@@ -105,7 +105,8 @@ impl Checkpoint {
             self.cfg.tau_prune,
             self.cfg.max_iterations,
             self.cfg.threads,
-            self.cfg.pool_persistent
+            self.cfg.pool_persistent,
+            self.cfg.simd.as_str()
         );
         s.push_str(",\"edges\":");
         write_edge_pairs(&mut s, &self.edges);
@@ -162,6 +163,13 @@ impl Checkpoint {
             max_iterations: c.get("max_iterations")?.as_usize()?,
             threads: c.get("threads")?.as_usize()?,
             pool_persistent: c.get("pool_persistent")?.as_bool()?,
+            // absent in pre-SIMD documents (still format 1): default Auto
+            simd: c
+                .get("simd")
+                .ok()
+                .and_then(|s| s.as_str().ok())
+                .and_then(crate::util::SimdPolicy::parse)
+                .unwrap_or_default(),
         };
         let edges = parse_edge_pairs(&v, "edges")?;
         let prev_missing = parse_edge_pairs(&v, "prev_missing")?;
@@ -299,6 +307,21 @@ mod tests {
         let mut bad = sample();
         bad.prev_extra.push((9, 0));
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn simd_policy_roundtrips_and_old_documents_default() {
+        use crate::util::SimdPolicy;
+        let mut cp = sample();
+        cp.cfg = cp.cfg.with_simd(SimdPolicy::Scalar);
+        let back = Checkpoint::from_json(&cp.to_json()).unwrap();
+        assert_eq!(back.cfg.simd, SimdPolicy::Scalar);
+        // pre-SIMD documents (format 1, no "simd" key) stay loadable and
+        // fall back to the Auto default
+        let doc = cp.to_json().replace(",\"simd\":\"scalar\"", "");
+        assert!(!doc.contains("simd"));
+        let back = Checkpoint::from_json(&doc).unwrap();
+        assert_eq!(back.cfg.simd, SimdPolicy::Auto);
     }
 
     #[test]

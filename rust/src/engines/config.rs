@@ -1,5 +1,6 @@
 //! PageRank configuration — the paper's Section 5.1.2 settings as defaults.
 
+use crate::util::simd::SimdPolicy;
 use std::fmt;
 
 /// A [`PagerankConfig`] field holds a value no engine can run with.
@@ -56,6 +57,13 @@ pub struct PagerankConfig {
     /// for `tests/pool_determinism.rs`). Ranks are bitwise identical either
     /// way; only wall-clock changes.
     pub pool_persistent: bool,
+    /// SIMD backend for the native engines' inner loops (`util::simd`):
+    /// `Auto` (the default) uses the detected vector unit unless the
+    /// `PAGERANK_SIMD=0` environment pin forces the portable scalar loops;
+    /// `Scalar`/`Vector` override the environment. Ranks are bitwise
+    /// identical at every setting — both backends obey the same fixed
+    /// lane-tree reduction order; only wall-clock changes.
+    pub simd: SimdPolicy,
 }
 
 impl Default for PagerankConfig {
@@ -68,6 +76,7 @@ impl Default for PagerankConfig {
             max_iterations: 500,
             threads: 0,
             pool_persistent: true,
+            simd: SimdPolicy::Auto,
         }
     }
 }
@@ -88,6 +97,11 @@ impl PagerankConfig {
     /// (`true`, the default) or the legacy per-region spawn path (`false`).
     pub fn with_pool_persistent(self, pool_persistent: bool) -> Self {
         Self { pool_persistent, ..self }
+    }
+
+    /// This configuration with an explicit SIMD backend policy.
+    pub fn with_simd(self, simd: SimdPolicy) -> Self {
+        Self { simd, ..self }
     }
 
     /// Check every field for values no engine can run with (NaN tolerances,
@@ -136,6 +150,7 @@ impl PagerankConfig {
             },
             threads: self.threads,
             pool_persistent: self.pool_persistent,
+            simd: self.simd,
         }
     }
 }
@@ -154,6 +169,7 @@ mod tests {
         assert_eq!(c.max_iterations, 500);
         assert_eq!(c.threads, 0, "0 = use available parallelism");
         assert!(c.pool_persistent, "persistent stealing pool is the default");
+        assert_eq!(c.simd, SimdPolicy::Auto, "SIMD auto-detect is the default");
         assert!(crate::util::par::resolve(c.threads) >= 1);
     }
 
@@ -164,6 +180,9 @@ mod tests {
         assert_eq!(c.alpha, 0.85);
         let c = c.with_pool_persistent(false);
         assert!(!c.pool_persistent);
+        assert_eq!(c.threads, 4, "other fields untouched");
+        let c = c.with_simd(SimdPolicy::Scalar);
+        assert_eq!(c.simd, SimdPolicy::Scalar);
         assert_eq!(c.threads, 4, "other fields untouched");
     }
 
@@ -194,6 +213,7 @@ mod tests {
             max_iterations: 0,
             threads: 3,
             pool_persistent: false,
+            simd: SimdPolicy::Vector,
         }
         .sanitized();
         assert!(c.validate().is_ok());
@@ -204,6 +224,7 @@ mod tests {
         assert_eq!(c.max_iterations, 500);
         assert_eq!(c.threads, 3);
         assert!(!c.pool_persistent, "mode knob passes through untouched");
+        assert_eq!(c.simd, SimdPolicy::Vector, "simd knob passes through untouched");
         let good = PagerankConfig::default().with_threads(2);
         assert_eq!(good.sanitized(), good, "valid config untouched");
     }

@@ -6,12 +6,20 @@
 //! asserting: once checkpoints and restarts interleave, the two vectors can
 //! legitimately come from snapshots with different vertex counts, and the
 //! serving path must degrade gracefully rather than abort.
+//!
+//! Both norms run through the `util::simd` striped lane-tree kernels
+//! (auto-detected backend; bitwise identical on scalar and vector units).
+//! A `-0.0` vs `0.0` element contributes exactly `+0.0` to either norm —
+//! the difference is `±0.0` and `abs` folds the sign — so a semantically
+//! equal sign bit can never register as error. NaN differences propagate
+//! into the result (the health watchdog screens for NaN ranks separately).
 
 use std::fmt;
 
 use super::config::PagerankConfig;
 use super::native::static_pagerank;
 use crate::graph::CsrGraph;
+use crate::util::simd::{self, SimdPolicy};
 
 /// Two rank vectors with different vertex counts were compared.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,13 +50,13 @@ fn check_lengths(a: &[f64], b: &[f64]) -> Result<(), LengthMismatch> {
 /// L1 distance between two rank vectors.
 pub fn l1_distance(a: &[f64], b: &[f64]) -> Result<f64, LengthMismatch> {
     check_lengths(a, b)?;
-    Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum())
+    Ok(simd::l1(simd::resolve(SimdPolicy::Auto), a, b))
 }
 
 /// L∞ distance.
 pub fn linf_distance(a: &[f64], b: &[f64]) -> Result<f64, LengthMismatch> {
     check_lengths(a, b)?;
-    Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max))
+    Ok(simd::linf(simd::resolve(SimdPolicy::Auto), a, b))
 }
 
 /// Reference ranks per Section 5.1.5 (τ = 1e-100, 500 iterations).
@@ -68,6 +76,16 @@ mod tests {
         assert_eq!(l1_distance(&a, &b).unwrap(), 0.5);
         assert_eq!(linf_distance(&a, &b).unwrap(), 0.25);
         assert_eq!(l1_distance(&a, &a).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn negative_zero_is_no_error() {
+        // -0.0 == 0.0: a sign-of-zero mismatch between two rank vectors
+        // must contribute exactly nothing to either norm
+        let a = [0.0, -0.0, 0.25];
+        let b = [-0.0, 0.0, 0.25];
+        assert_eq!(l1_distance(&a, &b).unwrap().to_bits(), 0.0f64.to_bits());
+        assert_eq!(linf_distance(&a, &b).unwrap().to_bits(), 0.0f64.to_bits());
     }
 
     #[test]

@@ -60,6 +60,21 @@ impl Approach {
             Approach::DynamicFrontierPruning => "DF-P",
         }
     }
+
+    /// How much of the previous snapshot's work the approach reuses, as a
+    /// rank on the degradation ladder: Static (0, reuses nothing) < ND (1)
+    /// < DT (2) < DF (3) < DF-P (4, reuses the most). The policy tests
+    /// assert selection degrades monotonically along this scale as batches
+    /// grow.
+    pub fn incrementality(&self) -> u8 {
+        match self {
+            Approach::Static => 0,
+            Approach::NaiveDynamic => 1,
+            Approach::DynamicTraversal => 2,
+            Approach::DynamicFrontier => 3,
+            Approach::DynamicFrontierPruning => 4,
+        }
+    }
 }
 
 /// Outcome of one PageRank computation.

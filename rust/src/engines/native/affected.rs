@@ -11,6 +11,10 @@
 //! — the result is independent of thread count and schedule, and the
 //! skewed hub ranges that used to load-imbalance a static round-robin
 //! assignment are simply stolen by idle lanes.
+//!
+//! This module is all-integer (u8 flags, edge ranges — no floating point),
+//! so it is independent of the `util::simd` backend by construction: the
+//! scalar×SIMD equivalence matrix needs no expansion-side cases.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 

@@ -17,6 +17,7 @@ use crate::engines::config::PagerankConfig;
 use crate::engines::PagerankResult;
 use crate::graph::CsrGraph;
 use crate::util::par;
+use crate::util::simd;
 
 /// Dynamic Traversal: mark everything reachable from the update (BFS over
 /// old + new graph), then run masked Eq. 1 iterations over that fixed set.
@@ -32,7 +33,8 @@ pub fn dynamic_traversal(
     let start = Instant::now();
     let _mode = par::push_mode(par::mode_for(cfg.pool_persistent));
     let threads = par::resolve(cfg.threads);
-    let plan = StepPlan::build(gt, threads);
+    let be = simd::resolve(cfg.simd);
+    let plan = StepPlan::build(gt, threads, be);
     let aff = dt_affected(g, g_old, batch);
     let initially_affected = aff.iter().filter(|&&x| x != 0).count();
 
@@ -43,7 +45,7 @@ pub fn dynamic_traversal(
 
     let mut iterations = 0;
     for _ in 0..cfg.max_iterations {
-        let dangling = compute_contrib(threads, g, &r, &mut contrib);
+        let dangling = compute_contrib(threads, be, g, &r, &mut contrib);
         let c0_iter = c0 + cfg.alpha * (dangling / n as f64);
 
         let aff_ref = &aff;
@@ -66,7 +68,7 @@ pub fn dynamic_traversal(
                         *slot = r_ref[v];
                         continue;
                     }
-                    let c = pull_contrib(gt, contrib_ref, v as u32);
+                    let c = pull_contrib(be, gt, contrib_ref, v as u32);
                     let nr = c0_iter + cfg.alpha * c;
                     lmax = lmax.max((nr - r_ref[v]).abs());
                     *slot = nr;
@@ -146,7 +148,8 @@ pub fn dynamic_frontier(
     let start = Instant::now();
     let _mode = par::push_mode(par::mode_for(cfg.pool_persistent));
     let threads = par::resolve(cfg.threads);
-    let plan = StepPlan::build(gt, threads);
+    let be = simd::resolve(cfg.simd);
+    let plan = StepPlan::build(gt, threads, be);
 
     let (mut dv, mut dn) = initial_affected(n, batch);
     expand_affected_threads(&mut dv, &dn, g, threads);
@@ -159,7 +162,7 @@ pub fn dynamic_frontier(
 
     let mut iterations = 0;
     for _ in 0..cfg.max_iterations {
-        let dangling = compute_contrib(threads, g, &r, &mut contrib);
+        let dangling = compute_contrib(threads, be, g, &r, &mut contrib);
         let c0_iter = c0 + cfg.alpha * (dangling / n as f64);
 
         // one lockstep pass over (r_new, δ_V, δ_N): low in-degree vertices
@@ -188,7 +191,7 @@ pub fn dynamic_frontier(
                         bdn[i] = 0;
                         continue;
                     }
-                    let c = pull_contrib(gt, contrib_ref, v as u32);
+                    let c = pull_contrib(be, gt, contrib_ref, v as u32);
                     let d_v = g.degree(v as u32) as f64;
                     let (nr, delta) = df_update(
                         c, d_v, r_ref[v], c0_iter, cfg.alpha, prune, cfg,

@@ -11,7 +11,7 @@
 //! split (Algorithm 4 via `graph::partition::partition_by_degree`):
 //!
 //! * **low in-degree** vertices are chunked across lanes in fixed vertex
-//!   blocks, each vertex's in-neighbor sum accumulated left-to-right;
+//!   blocks, each vertex's in-neighbor sum a striped lane-tree gather;
 //! * **hub** vertices (in-degree > [`HUB_IN_DEGREE`]) get partial sums
 //!   over *fixed* [`HUB_EDGE_CHUNK`]-sized in-edge ranges, combined in
 //!   fixed chunk order — a lane that finishes its dealt chunks steals the
@@ -22,6 +22,14 @@
 //! chunk-indexed slot reduced in fixed order, ranks are bit-identical at
 //! every `threads` setting, and `threads = 1` runs the same loops inline
 //! (no atomics anywhere on the rank path).
+//!
+//! The memory-bound inner loops — the contribution scaling pass, the pull
+//! gathers (both the low-degree per-vertex sums and the hub edge chunks)
+//! and the dangling-mass sum — run through `util::simd`: runtime-dispatched
+//! AVX2 lanes with a portable 4-lane fallback, both obeying the same fixed
+//! lane-tree reduction order, so ranks are additionally bit-identical
+//! between the scalar and vector backends ([`PagerankConfig::simd`] /
+//! `PAGERANK_SIMD=0` select the scalar reference path).
 //!
 //! Dead ends: a vertex with no out-edges would divide by zero in the
 //! contribution pass (the paper sidesteps this by inserting self-loops at
@@ -41,6 +49,7 @@ use super::config::PagerankConfig;
 use super::PagerankResult;
 use crate::graph::{partition_by_degree, CsrGraph};
 use crate::util::par;
+use crate::util::simd::{self, Backend};
 
 /// In-degree above which a vertex takes the hub (edge-chunked) path.
 pub(crate) const HUB_IN_DEGREE: u32 = 1024;
@@ -51,10 +60,10 @@ pub(crate) const HUB_IN_DEGREE: u32 = 1024;
 pub(crate) const HUB_EDGE_CHUNK: usize = 4096;
 
 /// c[v] = Σ_{u ∈ G.in(v)} r[u]/outdeg(u) for one vertex, pulled over the
-/// transpose adjacency.
+/// transpose adjacency as a striped lane-tree gather (`util::simd`).
 #[inline]
-pub(crate) fn pull_contrib(gt: &CsrGraph, contrib: &[f64], v: u32) -> f64 {
-    gt.neighbors(v).iter().map(|&u| contrib[u as usize]).sum()
+pub(crate) fn pull_contrib(be: Backend, gt: &CsrGraph, contrib: &[f64], v: u32) -> f64 {
+    simd::gather_sum(be, contrib, gt.neighbors(v))
 }
 
 /// Degree-partitioned schedule for the pull step over `gt`, built once per
@@ -63,6 +72,8 @@ pub(crate) fn pull_contrib(gt: &CsrGraph, contrib: &[f64], v: u32) -> f64 {
 pub(crate) struct StepPlan {
     /// Resolved pool width.
     pub threads: usize,
+    /// Resolved SIMD backend for every gather in this run.
+    pub backend: Backend,
     /// High in-degree vertices, in `partition_by_degree` (ascending) order.
     pub hubs: Vec<u32>,
     /// (index into `hubs`, absolute edge range in `gt.targets()`).
@@ -72,7 +83,7 @@ pub(crate) struct StepPlan {
 }
 
 impl StepPlan {
-    pub(crate) fn build(gt: &CsrGraph, threads: usize) -> StepPlan {
+    pub(crate) fn build(gt: &CsrGraph, threads: usize, backend: Backend) -> StepPlan {
         let threads = par::resolve(threads);
         let p = partition_by_degree(&gt.degrees(), HUB_IN_DEGREE);
         let hubs: Vec<u32> = p.high().to_vec();
@@ -90,7 +101,7 @@ impl StepPlan {
             }
             item_start.push(items.len());
         }
-        StepPlan { threads, hubs, items, item_start }
+        StepPlan { threads, backend, hubs, items, item_start }
     }
 
     /// Fold hub `h`'s chunk partials in fixed (chunk) order.
@@ -113,6 +124,7 @@ pub(crate) fn hub_partials(
     let items = &plan.items;
     let hubs = &plan.hubs;
     let targets = gt.targets();
+    let be = plan.backend;
     par::par_for(plan.threads, 1, &mut partials, |idx, slot| {
         let (h, lo, hi) = items[idx];
         if let Some(mask) = active {
@@ -120,40 +132,31 @@ pub(crate) fn hub_partials(
                 return;
             }
         }
-        slot[0] = targets[lo..hi].iter().map(|&u| contrib[u as usize]).sum();
+        slot[0] = simd::gather_sum(be, contrib, &targets[lo..hi]);
     });
     partials
 }
 
 /// Fill `contrib[u] = r[u]/outdeg(u)` (0 for dead ends) on the pool and
-/// return the dangling rank mass (deterministic block-ordered sum; exactly
+/// return the dangling rank mass. Each block runs the striped
+/// `simd::contrib_block` kernel; block partials fold in ascending block
+/// order, so the result is thread-count *and* backend invariant (exactly
 /// `0.0` when the graph has no dead ends).
 pub(crate) fn compute_contrib(
     threads: usize,
+    be: Backend,
     g: &CsrGraph,
     r: &[f64],
     contrib: &mut [f64],
 ) -> f64 {
+    let offsets = g.offsets();
     par::par_reduce(
         threads,
         par::DEFAULT_BLOCK,
         contrib,
         0.0,
         |a, b| a + b,
-        |start, out| {
-            let mut dangling = 0.0f64;
-            for (i, c) in out.iter_mut().enumerate() {
-                let u = start + i;
-                let d = g.degree(u as u32);
-                if d == 0 {
-                    *c = 0.0;
-                    dangling += r[u];
-                } else {
-                    *c = r[u] / d as f64;
-                }
-            }
-            dangling
-        },
+        |start, out| simd::contrib_block(be, offsets, r, start, out),
     )
 }
 
@@ -169,8 +172,8 @@ pub(crate) fn step_plain(
     c0: f64,
     alpha: f64,
 ) -> f64 {
-    // low in-degree vertices: blocked across threads, per-vertex
-    // left-to-right sums (identical to the sequential loop)
+    // low in-degree vertices: blocked across threads, per-vertex striped
+    // gathers (identical on every backend by the lane-tree contract)
     let mut linf = par::par_reduce(
         plan.threads,
         par::DEFAULT_BLOCK,
@@ -184,7 +187,7 @@ pub(crate) fn step_plain(
                 if gt.degree(v) > HUB_IN_DEGREE {
                     continue; // hub pass below owns this slot
                 }
-                let c = pull_contrib(gt, contrib, v);
+                let c = pull_contrib(plan.backend, gt, contrib, v);
                 let nr = c0 + alpha * c;
                 lmax = lmax.max((nr - r[start + i]).abs());
                 *slot = nr;
@@ -216,7 +219,8 @@ pub fn static_pagerank(
     let start = Instant::now();
     let _mode = par::push_mode(par::mode_for(cfg.pool_persistent));
     let threads = par::resolve(cfg.threads);
-    let plan = StepPlan::build(gt, threads);
+    let be = simd::resolve(cfg.simd);
+    let plan = StepPlan::build(gt, threads, be);
 
     let mut r: Vec<f64> = match r0 {
         Some(prev) => prev.to_vec(),
@@ -228,7 +232,7 @@ pub fn static_pagerank(
 
     let mut iterations = 0;
     for _ in 0..cfg.max_iterations {
-        let dangling = compute_contrib(threads, g, &r, &mut contrib);
+        let dangling = compute_contrib(threads, be, g, &r, &mut contrib);
         let c0_iter = c0 + cfg.alpha * (dangling / n as f64);
         let linf = step_plain(&plan, gt, &contrib, &r, &mut r_new, c0_iter, cfg.alpha);
         std::mem::swap(&mut r, &mut r_new);
@@ -317,6 +321,38 @@ mod tests {
         let res = static_pagerank(&g, &gt, &PagerankConfig::default(), None);
         assert!(res.ranks.iter().all(|r| r.is_finite() && *r > 0.0));
         assert!(ranks_sum_to_one(&res.ranks), "teleport fallback preserves mass");
+    }
+
+    #[test]
+    fn scalar_and_vector_backends_bitwise_identical() {
+        use crate::util::SimdPolicy;
+        // mix of hub path (star center), low-degree path, and a dead end —
+        // exercises gather_sum, hub chunks and the dangling sum on both
+        // backends
+        let n = 2600usize;
+        let mut adj: Vec<Vec<u32>> = (0..n).map(|v| vec![v as u32]).collect();
+        for v in 1..n {
+            adj[v].push(0);
+        }
+        adj[5].clear(); // dead end
+        let g = CsrGraph::from_adjacency(&adj);
+        let gt = g.transpose();
+        let scalar = static_pagerank(
+            &g,
+            &gt,
+            &PagerankConfig::default().with_simd(SimdPolicy::Scalar),
+            None,
+        );
+        for threads in [1, 4] {
+            let cfg = PagerankConfig::default()
+                .with_simd(SimdPolicy::Vector)
+                .with_threads(threads);
+            let vector = static_pagerank(&g, &gt, &cfg, None);
+            assert_eq!(vector.iterations, scalar.iterations, "t={threads}");
+            for (a, b) in vector.ranks.iter().zip(&scalar.ranks) {
+                assert_eq!(a.to_bits(), b.to_bits(), "t={threads}");
+            }
+        }
     }
 
     #[test]

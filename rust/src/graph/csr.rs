@@ -174,6 +174,15 @@ impl CsrGraph {
             .collect()
     }
 
+    /// All degrees as f64 (exact — degrees fit far below 2^52), for the
+    /// asynchronous engines' fused gather-divide pull (`util::simd`).
+    pub fn degrees_f64(&self) -> Vec<f64> {
+        self.offsets
+            .windows(2)
+            .map(|w| (w[1] - w[0]) as f64)
+            .collect()
+    }
+
     /// Transposed graph (in-neighbors become out-neighbors), built with the
     /// same parallel counting-sort as [`CsrGraph::from_edges_threads`];
     /// identical output at every thread count.

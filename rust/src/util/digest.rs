@@ -1,0 +1,70 @@
+//! Bitwise rank digests for the determinism gates.
+//!
+//! `ci.sh` and `tests/pool_determinism.rs` compare rank vectors by hashing
+//! their raw f64 bits with FNV-1a: any schedule-, thread-count-, pool-mode-
+//! or SIMD-backend-dependent bit anywhere in the stack changes the digest.
+//! The one bit pattern that must *not* fail the gate is the sign of zero:
+//! `-0.0 == 0.0` semantically, and a backend is allowed to produce either
+//! (e.g. a vector blend writing `+0.0` where a scalar multiply produced
+//! `-0.0`), so [`fnv1a_ranks`] normalizes negative zero to `+0.0` before
+//! hashing.
+
+/// Fold `-0.0` to `+0.0`; every other value (including NaN) is unchanged.
+#[inline]
+pub fn normalize_zero(x: f64) -> f64 {
+    if x == 0.0 {
+        0.0
+    } else {
+        x
+    }
+}
+
+/// 64-bit FNV-1a over the little-endian bits of `ranks`, with negative
+/// zeros normalized away (see module doc).
+pub fn fnv1a_ranks(ranks: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &r in ranks {
+        for b in normalize_zero(r).to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_zero_folds_sign_only() {
+        assert_eq!(normalize_zero(-0.0).to_bits(), 0.0f64.to_bits());
+        assert_eq!(normalize_zero(0.0).to_bits(), 0.0f64.to_bits());
+        assert_eq!(normalize_zero(1.5), 1.5);
+        assert_eq!(normalize_zero(-1.5), -1.5);
+        assert!(normalize_zero(f64::NAN).is_nan());
+        assert_eq!(normalize_zero(f64::NEG_INFINITY), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn digest_ignores_zero_sign_but_nothing_else() {
+        let a = [0.25, 0.0, 0.5];
+        let b = [0.25, -0.0, 0.5];
+        assert_eq!(fnv1a_ranks(&a), fnv1a_ranks(&b), "-0.0 vs 0.0 must agree");
+        let c = [0.25, 0.0, 0.5 + f64::EPSILON];
+        assert_ne!(fnv1a_ranks(&a), fnv1a_ranks(&c), "one ulp must differ");
+        assert_ne!(fnv1a_ranks(&a), fnv1a_ranks(&a[..2]), "length matters");
+    }
+
+    #[test]
+    fn digest_matches_known_fnv1a_vector() {
+        // FNV-1a of 8 zero bytes (one 0.0 rank) — the offset basis folded
+        // through eight zero bytes.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for _ in 0..8 {
+            h = (h ^ 0).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        assert_eq!(fnv1a_ranks(&[0.0]), h);
+        assert_eq!(fnv1a_ranks(&[-0.0]), h);
+    }
+}

@@ -1,9 +1,14 @@
 //! Self-contained substrates for the offline build: deterministic RNG,
-//! minimal JSON (replacing the `rand` / `serde_json` crates), and the
-//! scoped-thread work pool the native engines run on (replacing `rayon`).
+//! minimal JSON (replacing the `rand` / `serde_json` crates), the
+//! work-stealing pool the native engines run on (replacing `rayon`), the
+//! runtime-dispatched SIMD kernels for their inner loops, and the bitwise
+//! rank digest used by the determinism gates.
 
+pub mod digest;
 pub mod json;
 pub mod par;
 pub mod rng;
+pub mod simd;
 
 pub use rng::Rng;
+pub use simd::SimdPolicy;

@@ -1,0 +1,642 @@
+//! SIMD-vectorized f64 kernels for the native engines' memory-bound inner
+//! loops: contribution scaling (`r[v]/deg(v)` + dangling mass), the pull
+//! gather (`Σ contrib[u]` over in-neighbors / hub edge chunks), and the
+//! `l1`/`linf` norms. Two backends, runtime-dispatched:
+//!
+//! * [`Backend::Avx2`] — 256-bit `core::arch::x86_64` intrinsics (4 × f64
+//!   lanes, `vgatherdpd` for the index gathers), selected when
+//!   `is_x86_feature_detected!("avx2")` holds;
+//! * [`Backend::Portable`] — plain 4-lane `[f64; 4]` array loops, always
+//!   available, auto-vectorizable, and the escape hatch / differential
+//!   reference ([`SimdPolicy::Scalar`], or `PAGERANK_SIMD=0`).
+//!
+//! ## The fixed lane-tree reduction-order contract
+//!
+//! Determinism is the hard requirement: ranks must be **bitwise identical**
+//! whether a loop ran on the vector unit or the scalar one, at every thread
+//! count and in both pool modes (`tests/pool_determinism.rs` pins the full
+//! matrix). Both backends therefore implement the *same* fixed-shape
+//! reduction — a function of the input length only, never of the backend:
+//!
+//! 1. **Striping.** Element `i` of a block is folded into lane `i mod 4` of
+//!    a 4-lane accumulator; the main loop consumes the `len / 4` full
+//!    groups in order, and the `len mod 4` tail elements are folded into
+//!    lanes `0..tail` in element order (the vector backends run the tail
+//!    with the identical scalar ops).
+//! 2. **Horizontal sum.** Lanes combine as `(l0 + l1) + (l2 + l3)` — never
+//!    a left-to-right fold.
+//! 3. **Horizontal max.** Lanes combine as
+//!    `vmax(vmax(l0, l1), vmax(l2, l3))` where `vmax(a, b)` is the x86
+//!    `maxpd` rule `if a > b { a } else { b }` (ties and NaNs return `b`),
+//!    applied with the accumulator as the first operand.
+//! 4. **Elementwise ops** (divide, subtract, abs, zero-blend) are lane-pure
+//!    IEEE-754 operations, bit-identical between the scalar and vector
+//!    units by the IEEE requirement on basic operations.
+//!
+//! Because a 4-lane stripe is *not* a left-to-right sum, wiring a loop
+//! through this module changes its rounding relative to the old sequential
+//! code — by design, once, for both backends. Engine-level goldens compare
+//! with tolerances; the bitwise surfaces (thread counts, pool modes, SIMD
+//! backends, checkpoint restores) all run through the same stripes.
+//!
+//! Negative zero: `-0.0` and `0.0` are distinct bit patterns that compare
+//! equal; [`util::digest`](crate::util::digest) normalizes the sign bit
+//! away before hashing so a semantically-equal `-0.0` can never fail the
+//! golden digest.
+
+use std::env;
+
+/// SIMD backend selection knob on [`PagerankConfig`], mirroring the
+/// `threads`/`PAGERANK_THREADS` pattern: an explicit setting always wins
+/// over the environment.
+///
+/// [`PagerankConfig`]: crate::engines::config::PagerankConfig
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdPolicy {
+    /// Honor the `PAGERANK_SIMD` environment pin if set (`0` forces the
+    /// portable scalar loops, anything else the vector backend); otherwise
+    /// use the detected vector backend. The default.
+    #[default]
+    Auto,
+    /// Force the portable scalar loops — the escape hatch, and the
+    /// reference side of every differential test.
+    Scalar,
+    /// Force the vector backend (falls back to portable loops on hardware
+    /// without AVX2; results are bitwise identical either way).
+    Vector,
+}
+
+impl SimdPolicy {
+    /// Serialization name (checkpoints, reports).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SimdPolicy::Auto => "auto",
+            SimdPolicy::Scalar => "scalar",
+            SimdPolicy::Vector => "vector",
+        }
+    }
+
+    /// Parse a serialization name.
+    pub fn parse(s: &str) -> Option<SimdPolicy> {
+        match s {
+            "auto" => Some(SimdPolicy::Auto),
+            "scalar" => Some(SimdPolicy::Scalar),
+            "vector" => Some(SimdPolicy::Vector),
+            _ => None,
+        }
+    }
+}
+
+/// The concrete instruction path a kernel call executes on. Both variants
+/// obey the module-level reduction-order contract, so they are bitwise
+/// interchangeable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// 4-lane `[f64; 4]` array loops, plain Rust.
+    Portable,
+    /// 256-bit AVX2 intrinsics (runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+/// The widest backend this host supports.
+pub fn detect() -> Backend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Backend::Avx2;
+        }
+    }
+    Backend::Portable
+}
+
+/// Resolve a configured [`SimdPolicy`] to a concrete [`Backend`]:
+/// `Scalar`/`Vector` are explicit and win over the environment; `Auto`
+/// consults `PAGERANK_SIMD` (`0` pins the scalar path — used by ci.sh to
+/// run the whole suite on each side of the differential) and otherwise
+/// detects.
+pub fn resolve(policy: SimdPolicy) -> Backend {
+    match policy {
+        SimdPolicy::Scalar => Backend::Portable,
+        SimdPolicy::Vector => detect(),
+        SimdPolicy::Auto => match env::var("PAGERANK_SIMD") {
+            Ok(s) if s.trim() == "0" => Backend::Portable,
+            _ => detect(),
+        },
+    }
+}
+
+/// Contract rule 2: fixed lane tree for sums.
+#[inline(always)]
+fn hsum(l: [f64; 4]) -> f64 {
+    (l[0] + l[1]) + (l[2] + l[3])
+}
+
+/// Contract rule 3: the x86 `maxpd` rule — ties and NaNs return `b`. Both
+/// backends reduce maxima with this exact operation (accumulator first).
+#[inline(always)]
+fn vmax(a: f64, b: f64) -> f64 {
+    if a > b {
+        a
+    } else {
+        b
+    }
+}
+
+/// Contract rule 3: fixed lane tree for maxima.
+#[inline(always)]
+fn hmax(l: [f64; 4]) -> f64 {
+    vmax(vmax(l[0], l[1]), vmax(l[2], l[3]))
+}
+
+/// One contribution-pass element (shared by the portable loop and the
+/// vector backends' tails so the per-element ops are literally the same
+/// code): `out = r[u]/deg(u)` with dead ends contributing `0` and their
+/// rank mass folded into the dangling accumulator lane. Live vertices add
+/// `+0.0` to the lane, matching the vector backends' masked add.
+#[inline(always)]
+fn contrib_lane(offsets: &[u64], r: &[f64], u: usize, slot: &mut f64, lane: &mut f64) {
+    let d = offsets[u + 1] - offsets[u];
+    if d == 0 {
+        *slot = 0.0;
+        *lane += r[u];
+    } else {
+        *slot = r[u] / d as f64;
+        *lane += 0.0;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Portable backend: 4-lane array loops. Lane assignment is `i mod 4`, so the
+// tail lands in lanes 0..tail exactly as the contract requires.
+// ---------------------------------------------------------------------------
+
+fn sum_portable(xs: &[f64]) -> f64 {
+    let mut l = [0.0f64; 4];
+    for (i, &x) in xs.iter().enumerate() {
+        l[i % 4] += x;
+    }
+    hsum(l)
+}
+
+fn gather_sum_portable(values: &[f64], idx: &[u32]) -> f64 {
+    let mut l = [0.0f64; 4];
+    for (i, &j) in idx.iter().enumerate() {
+        l[i % 4] += values[j as usize];
+    }
+    hsum(l)
+}
+
+fn gather_div_sum_portable(num: &[f64], den: &[f64], idx: &[u32]) -> f64 {
+    let mut l = [0.0f64; 4];
+    for (i, &j) in idx.iter().enumerate() {
+        l[i % 4] += num[j as usize] / den[j as usize];
+    }
+    hsum(l)
+}
+
+fn contrib_block_portable(offsets: &[u64], r: &[f64], start: usize, out: &mut [f64]) -> f64 {
+    let mut l = [0.0f64; 4];
+    for (i, slot) in out.iter_mut().enumerate() {
+        contrib_lane(offsets, r, start + i, slot, &mut l[i % 4]);
+    }
+    hsum(l)
+}
+
+fn l1_portable(a: &[f64], b: &[f64]) -> f64 {
+    let mut l = [0.0f64; 4];
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        l[i % 4] += (x - y).abs();
+    }
+    hsum(l)
+}
+
+fn linf_portable(a: &[f64], b: &[f64]) -> f64 {
+    let mut l = [0.0f64; 4];
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let lane = &mut l[i % 4];
+        *lane = vmax(*lane, (x - y).abs());
+    }
+    hmax(l)
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 backend. Every kernel runs the same stripes as the portable loops:
+// the vector main loop covers the full 4-groups, the tail reuses the scalar
+// per-element ops on the spilled accumulator lanes.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{contrib_lane, hmax, hsum};
+    use core::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sum(xs: &[f64]) -> f64 {
+        let mut acc = _mm256_setzero_pd();
+        let mut chunks = xs.chunks_exact(4);
+        for c in &mut chunks {
+            acc = _mm256_add_pd(acc, unsafe { _mm256_loadu_pd(c.as_ptr()) });
+        }
+        let mut l = [0.0f64; 4];
+        unsafe { _mm256_storeu_pd(l.as_mut_ptr(), acc) };
+        for (j, &x) in chunks.remainder().iter().enumerate() {
+            l[j] += x;
+        }
+        hsum(l)
+    }
+
+    /// # Safety
+    /// Caller guarantees AVX2, every index in bounds for `values`, and
+    /// `values.len() <= i32::MAX` (`vgatherdpd` sign-extends its indices).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_sum(values: &[f64], idx: &[u32]) -> f64 {
+        let mut acc = _mm256_setzero_pd();
+        let mut chunks = idx.chunks_exact(4);
+        for c in &mut chunks {
+            let vi = unsafe { _mm_loadu_si128(c.as_ptr() as *const __m128i) };
+            let g = unsafe { _mm256_i32gather_pd::<8>(values.as_ptr(), vi) };
+            acc = _mm256_add_pd(acc, g);
+        }
+        let mut l = [0.0f64; 4];
+        unsafe { _mm256_storeu_pd(l.as_mut_ptr(), acc) };
+        for (j, &i) in chunks.remainder().iter().enumerate() {
+            l[j] += values[i as usize];
+        }
+        hsum(l)
+    }
+
+    /// # Safety
+    /// As [`gather_sum`], for both `num` and `den`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_div_sum(num: &[f64], den: &[f64], idx: &[u32]) -> f64 {
+        let mut acc = _mm256_setzero_pd();
+        let mut chunks = idx.chunks_exact(4);
+        for c in &mut chunks {
+            let vi = unsafe { _mm_loadu_si128(c.as_ptr() as *const __m128i) };
+            let n = unsafe { _mm256_i32gather_pd::<8>(num.as_ptr(), vi) };
+            let d = unsafe { _mm256_i32gather_pd::<8>(den.as_ptr(), vi) };
+            acc = _mm256_add_pd(acc, _mm256_div_pd(n, d));
+        }
+        let mut l = [0.0f64; 4];
+        unsafe { _mm256_storeu_pd(l.as_mut_ptr(), acc) };
+        for (j, &i) in chunks.remainder().iter().enumerate() {
+            l[j] += num[i as usize] / den[i as usize];
+        }
+        hsum(l)
+    }
+
+    /// # Safety
+    /// Caller guarantees AVX2, `offsets[start + i + 1]` in bounds for every
+    /// `i < out.len()`, and `r[start + i]` in bounds likewise.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn contrib_block(
+        offsets: &[u64],
+        r: &[f64],
+        start: usize,
+        out: &mut [f64],
+    ) -> f64 {
+        // u64 degree -> f64 via the 2^52 magic-bias trick (exact for
+        // degrees < 2^52, a given for vertex in-degrees).
+        let magic_i = _mm256_set1_epi64x(0x4330_0000_0000_0000);
+        let magic_f = _mm256_set1_pd(4_503_599_627_370_496.0); // 2^52
+        let zero = _mm256_setzero_si256();
+        let mut acc = _mm256_setzero_pd();
+        let full = out.len() / 4 * 4;
+        let mut i = 0;
+        while i < full {
+            let u = start + i;
+            let lo = unsafe { _mm256_loadu_si256(offsets.as_ptr().add(u) as *const __m256i) };
+            let hi =
+                unsafe { _mm256_loadu_si256(offsets.as_ptr().add(u + 1) as *const __m256i) };
+            let deg = _mm256_sub_epi64(hi, lo);
+            // all-ones lanes where deg == 0 (dead end)
+            let dead = _mm256_castsi256_pd(_mm256_cmpeq_epi64(deg, zero));
+            let degf =
+                _mm256_sub_pd(_mm256_castsi256_pd(_mm256_or_si256(deg, magic_i)), magic_f);
+            let rv = unsafe { _mm256_loadu_pd(r.as_ptr().add(u)) };
+            // dead lanes: r/0.0 is ±inf/NaN but blended to +0.0 before the
+            // store; live lanes add +0.0 to the dangling accumulator —
+            // both exactly matching `contrib_lane`.
+            let q = _mm256_div_pd(rv, degf);
+            unsafe {
+                _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_andnot_pd(dead, q))
+            };
+            acc = _mm256_add_pd(acc, _mm256_and_pd(dead, rv));
+            i += 4;
+        }
+        let mut l = [0.0f64; 4];
+        unsafe { _mm256_storeu_pd(l.as_mut_ptr(), acc) };
+        for (j, slot) in out[full..].iter_mut().enumerate() {
+            contrib_lane(offsets, r, start + full + j, slot, &mut l[j]);
+        }
+        hsum(l)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn l1(a: &[f64], b: &[f64]) -> f64 {
+        let sign = _mm256_set1_pd(-0.0);
+        let mut acc = _mm256_setzero_pd();
+        let mut ca = a.chunks_exact(4);
+        let mut cb = b.chunks_exact(4);
+        for (xa, xb) in (&mut ca).zip(&mut cb) {
+            let d = _mm256_sub_pd(unsafe { _mm256_loadu_pd(xa.as_ptr()) }, unsafe {
+                _mm256_loadu_pd(xb.as_ptr())
+            });
+            acc = _mm256_add_pd(acc, _mm256_andnot_pd(sign, d));
+        }
+        let mut l = [0.0f64; 4];
+        unsafe { _mm256_storeu_pd(l.as_mut_ptr(), acc) };
+        for (j, (&x, &y)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+            l[j] += (x - y).abs();
+        }
+        hsum(l)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn linf(a: &[f64], b: &[f64]) -> f64 {
+        let sign = _mm256_set1_pd(-0.0);
+        let mut acc = _mm256_setzero_pd();
+        let mut ca = a.chunks_exact(4);
+        let mut cb = b.chunks_exact(4);
+        for (xa, xb) in (&mut ca).zip(&mut cb) {
+            let d = _mm256_sub_pd(unsafe { _mm256_loadu_pd(xa.as_ptr()) }, unsafe {
+                _mm256_loadu_pd(xb.as_ptr())
+            });
+            // maxpd(acc, v): acc > v ? acc : v — the `vmax` rule with the
+            // accumulator first, as the portable loop does.
+            acc = _mm256_max_pd(acc, _mm256_andnot_pd(sign, d));
+        }
+        let mut l = [0.0f64; 4];
+        unsafe { _mm256_storeu_pd(l.as_mut_ptr(), acc) };
+        for (j, (&x, &y)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+            let lane = &mut l[j];
+            *lane = super::vmax(*lane, (x - y).abs());
+        }
+        hmax(l)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch. The AVX2 gathers interpret indices as signed 32-bit, so slices
+// at or beyond i32::MAX elements fall back to the portable loops (bitwise
+// identical by the contract, so the fallback is invisible to callers).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+const GATHER_MAX: usize = i32::MAX as usize;
+
+/// Striped block sum of `xs` under the lane-tree contract.
+pub fn sum(be: Backend, xs: &[f64]) -> f64 {
+    match be {
+        Backend::Portable => sum_portable(xs),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Backend::Avx2 is only handed out by `detect()`.
+        Backend::Avx2 => unsafe { avx2::sum(xs) },
+    }
+}
+
+/// Striped gather sum `Σ values[idx[i]]` — the pull kernel's inner loop.
+/// Every index must be in bounds (the CSR neighbor invariant).
+pub fn gather_sum(be: Backend, values: &[f64], idx: &[u32]) -> f64 {
+    match be {
+        Backend::Portable => gather_sum_portable(values, idx),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => {
+            if values.len() > GATHER_MAX {
+                return gather_sum_portable(values, idx);
+            }
+            // SAFETY: AVX2 detected; indices are in-bounds vertex ids and
+            // the base length fits the signed-index gather.
+            unsafe { avx2::gather_sum(values, idx) }
+        }
+    }
+}
+
+/// Striped gather-divide sum `Σ num[idx[i]] / den[idx[i]]` — the
+/// asynchronous engines' fused contribution pull (`r[u]/deg(u)` without a
+/// materialized contrib vector). `num` and `den` must have equal length and
+/// every index must be in bounds for both.
+pub fn gather_div_sum(be: Backend, num: &[f64], den: &[f64], idx: &[u32]) -> f64 {
+    debug_assert_eq!(num.len(), den.len());
+    match be {
+        Backend::Portable => gather_div_sum_portable(num, den, idx),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => {
+            if num.len() > GATHER_MAX {
+                return gather_div_sum_portable(num, den, idx);
+            }
+            // SAFETY: as `gather_sum`, for both base slices.
+            unsafe { avx2::gather_div_sum(num, den, idx) }
+        }
+    }
+}
+
+/// Contribution pass over one vertex block: `out[i] = r[start+i]/deg` with
+/// dead ends writing `0.0`, returning the block's dangling rank mass as a
+/// striped lane-tree sum. `offsets` is the out-CSR offset array (length
+/// `n + 1`); `r` the full rank vector; `out` the block
+/// `contrib[start..start + out.len()]`.
+pub fn contrib_block(be: Backend, offsets: &[u64], r: &[f64], start: usize, out: &mut [f64]) -> f64 {
+    debug_assert!(start + out.len() < offsets.len());
+    debug_assert!(start + out.len() <= r.len());
+    match be {
+        Backend::Portable => contrib_block_portable(offsets, r, start, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: AVX2 detected; the debug-asserted bounds are the CSR
+        // block invariant the parallel substrate already guarantees.
+        Backend::Avx2 => unsafe { avx2::contrib_block(offsets, r, start, out) },
+    }
+}
+
+/// Striped L1 distance `Σ |a[i] - b[i]|`. Slices must have equal length.
+/// `-0.0` and `0.0` compare equal: their difference is `±0.0` and `abs`
+/// folds it to `+0.0`, so a sign-only mismatch contributes exactly zero on
+/// both backends.
+pub fn l1(be: Backend, a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    match be {
+        Backend::Portable => l1_portable(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Backend::Avx2 is only handed out by `detect()`.
+        Backend::Avx2 => unsafe { avx2::l1(a, b) },
+    }
+}
+
+/// Striped L∞ distance `max |a[i] - b[i]|` under the `vmax` lane tree.
+/// NaN differences propagate (unlike the old `f64::max` fold, which
+/// silently dropped them) — poisoned inputs now surface as a NaN norm.
+pub fn linf(be: Backend, a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    match be {
+        Backend::Portable => linf_portable(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Backend::Avx2 is only handed out by `detect()`.
+        Backend::Avx2 => unsafe { avx2::linf(a, b) },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Both backends when the host has a vector unit, otherwise portable
+    /// twice (the differential is then trivially green, but every kernel
+    /// still runs).
+    fn backends() -> Vec<Backend> {
+        let mut v = vec![Backend::Portable];
+        if detect() != Backend::Portable {
+            v.push(detect());
+        }
+        v
+    }
+
+    fn random_values(rng: &mut Rng, len: usize) -> Vec<f64> {
+        (0..len)
+            .map(|_| match rng.gen_range(16) {
+                // mix signs, magnitudes, exact zeros and negative zeros
+                0 => 0.0,
+                1 => -0.0,
+                2 => rng.gen_f64() * 1e300,
+                3 => -rng.gen_f64() * 1e-300,
+                _ => rng.gen_f64() - 0.5,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lane_tree_shape_is_fixed() {
+        // 5 elements: lanes are [a+e, b, c, d]; tree = ((a+e)+b) + (c+d)
+        let xs = [1e100, 1.0, -1e100, 2.0, 3.0];
+        let want = ((1e100 + 3.0) + 1.0) + (-1e100 + 2.0);
+        assert_eq!(sum(Backend::Portable, &xs).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn backends_bitwise_equal_on_sums_and_norms() {
+        let mut rng = Rng::seed_from_u64(11);
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 15, 64, 67, 1023] {
+            let a = random_values(&mut rng, len);
+            let b = random_values(&mut rng, len);
+            let base_sum = sum(Backend::Portable, &a);
+            let base_l1 = l1(Backend::Portable, &a, &b);
+            let base_linf = linf(Backend::Portable, &a, &b);
+            for be in backends() {
+                assert_eq!(sum(be, &a).to_bits(), base_sum.to_bits(), "sum len={len}");
+                assert_eq!(l1(be, &a, &b).to_bits(), base_l1.to_bits(), "l1 len={len}");
+                assert_eq!(
+                    linf(be, &a, &b).to_bits(),
+                    base_linf.to_bits(),
+                    "linf len={len}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backends_bitwise_equal_on_gathers() {
+        let mut rng = Rng::seed_from_u64(23);
+        let values = random_values(&mut rng, 997);
+        let dens: Vec<f64> = (0..997).map(|_| 1.0 + rng.gen_range(40) as f64).collect();
+        for len in [0usize, 1, 3, 4, 6, 9, 31, 256, 1000] {
+            let idx: Vec<u32> = (0..len).map(|_| rng.gen_range(997) as u32).collect();
+            let base = gather_sum(Backend::Portable, &values, &idx);
+            let base_div = gather_div_sum(Backend::Portable, &values, &dens, &idx);
+            for be in backends() {
+                assert_eq!(
+                    gather_sum(be, &values, &idx).to_bits(),
+                    base.to_bits(),
+                    "gather len={len}"
+                );
+                assert_eq!(
+                    gather_div_sum(be, &values, &dens, &idx).to_bits(),
+                    base_div.to_bits(),
+                    "gather_div len={len}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backends_bitwise_equal_on_contrib_blocks() {
+        let mut rng = Rng::seed_from_u64(37);
+        // offsets with dead ends sprinkled in (equal consecutive offsets)
+        let n = 530usize;
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut acc = 0u64;
+        offsets.push(0);
+        for _ in 0..n {
+            if rng.gen_bool(0.15) {
+                // dead end: degree 0
+            } else {
+                acc += 1 + rng.gen_range(2000) as u64;
+            }
+            offsets.push(acc);
+        }
+        let r = random_values(&mut rng, n);
+        for (start, len) in [(0usize, 4usize), (0, 530), (3, 7), (128, 257), (520, 10)] {
+            let mut base_out = vec![0.0f64; len];
+            let base =
+                contrib_block(Backend::Portable, &offsets, &r, start, &mut base_out);
+            for be in backends() {
+                let mut out = vec![99.0f64; len];
+                let dangling = contrib_block(be, &offsets, &r, start, &mut out);
+                assert_eq!(dangling.to_bits(), base.to_bits(), "dangling {start}+{len}");
+                for (i, (x, y)) in out.iter().zip(&base_out).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "contrib[{}]", start + i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn contrib_block_handles_dead_ends() {
+        // vertex 1 is a dead end: contrib 0, mass in the dangling sum
+        let offsets = [0u64, 2, 2, 5];
+        let r = [0.5, 0.25, 0.25];
+        for be in backends() {
+            let mut out = [9.0f64; 3];
+            let dangling = contrib_block(be, &offsets, &r, 0, &mut out);
+            assert_eq!(out[0].to_bits(), (0.5 / 2.0).to_bits());
+            assert_eq!(out[1].to_bits(), 0.0f64.to_bits(), "dead end writes +0.0");
+            assert_eq!(out[2].to_bits(), (0.25 / 3.0).to_bits());
+            assert_eq!(dangling.to_bits(), 0.25f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn norms_treat_negative_zero_as_equal() {
+        let a = [0.0, -0.0, 1.0];
+        let b = [-0.0, 0.0, 1.0];
+        for be in backends() {
+            assert_eq!(l1(be, &a, &b).to_bits(), 0.0f64.to_bits());
+            assert_eq!(linf(be, &a, &b).to_bits(), 0.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn policy_resolution_explicit_wins() {
+        assert_eq!(resolve(SimdPolicy::Scalar), Backend::Portable);
+        // Vector resolves to whatever the host supports…
+        assert_eq!(resolve(SimdPolicy::Vector), detect());
+        // …and parsing round-trips
+        for p in [SimdPolicy::Auto, SimdPolicy::Scalar, SimdPolicy::Vector] {
+            assert_eq!(SimdPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(SimdPolicy::parse("avx512"), None);
+        assert_eq!(SimdPolicy::default(), SimdPolicy::Auto);
+    }
+
+    #[test]
+    fn vmax_follows_maxpd_rule() {
+        assert_eq!(vmax(1.0, 2.0), 2.0);
+        assert_eq!(vmax(2.0, 1.0), 2.0);
+        // ties return the second operand (bit check distinguishes ±0.0)
+        assert_eq!(vmax(0.0, -0.0).to_bits(), (-0.0f64).to_bits());
+        assert_eq!(vmax(-0.0, 0.0).to_bits(), 0.0f64.to_bits());
+        // NaN in either operand returns the second operand
+        assert!(vmax(f64::NAN, 1.0) == 1.0);
+        assert!(vmax(1.0, f64::NAN).is_nan());
+    }
+}

@@ -1,0 +1,94 @@
+//! Baseline drift gate: the Gunrock-like and Hornet-like comparators must
+//! keep converging to the same fixed point as the native static engine on
+//! every generator family, with a sane iteration count.
+//!
+//! The speedup claims in EXPERIMENTS.md compare wall-clock against these
+//! baselines; if a refactor ever changed *what* a baseline computes (not
+//! just how fast), the comparison would silently measure two different
+//! problems. These tests pin rank agreement (L1 and L∞ against the native
+//! engine at the same configuration) and iteration-count proximity, so any
+//! algorithmic drift in a baseline fails loudly.
+
+use pagerank_dynamic::engines::baselines::{gunrock_like, hornet_like};
+use pagerank_dynamic::engines::error::{l1_distance, linf_distance};
+use pagerank_dynamic::engines::native::static_pagerank;
+use pagerank_dynamic::generators::{chain, er, grid, rmat};
+use pagerank_dynamic::graph::GraphBuilder;
+use pagerank_dynamic::PagerankConfig;
+
+/// The four generator families of the determinism matrix. Self-loops are
+/// required: the Hornet baseline divides by out-degree with no dead-end
+/// guard (faithful to the modeled framework, which assumes them).
+fn generators() -> Vec<(&'static str, GraphBuilder)> {
+    let mut gens = vec![
+        ("chain", chain::generate(1_500, 30, 5)),
+        ("grid", grid::generate(30, 40, 7)),
+        ("er", er::generate(1_800, 6.0, 11)),
+        ("rmat-web", rmat::generate(11, 8.0, rmat::RmatParams::WEB, 13)),
+    ];
+    for (_, b) in gens.iter_mut() {
+        b.ensure_self_loops();
+    }
+    gens
+}
+
+#[test]
+fn baselines_agree_with_native_static_on_all_families() {
+    let cfg = PagerankConfig::default();
+    for (gname, b) in generators() {
+        let g = b.to_csr();
+        let gt = g.transpose();
+        let native = static_pagerank(&g, &gt, &cfg, None);
+        for (bname, res) in [
+            ("gunrock", gunrock_like(&g, &cfg)),
+            ("hornet", hornet_like(&g, &cfg)),
+        ] {
+            let l1 = l1_distance(&res.ranks, &native.ranks).unwrap();
+            let linf = linf_distance(&res.ranks, &native.ranks).unwrap();
+            assert!(
+                l1 < 1e-5,
+                "{gname}/{bname}: L1 drift {l1:.3e} from native static"
+            );
+            assert!(
+                linf < 1e-8,
+                "{gname}/{bname}: L∞ drift {linf:.3e} from native static"
+            );
+            assert!(
+                (res.ranks.iter().sum::<f64>() - 1.0).abs() < 1e-6,
+                "{gname}/{bname}: rank mass not 1"
+            );
+        }
+    }
+}
+
+#[test]
+fn baseline_iteration_counts_stay_sane() {
+    // Same damping, same tolerance, same synchronous update → the baselines
+    // walk the same power iteration and must land within a couple of
+    // iterations of the native engine (their norms differ only in
+    // reduction shape), well before the cap. A baseline suddenly
+    // converging much faster or hitting the cap means it is no longer
+    // computing the same thing.
+    let cfg = PagerankConfig::default();
+    for (gname, b) in generators() {
+        let g = b.to_csr();
+        let gt = g.transpose();
+        let native = static_pagerank(&g, &gt, &cfg, None);
+        for (bname, res) in [
+            ("gunrock", gunrock_like(&g, &cfg)),
+            ("hornet", hornet_like(&g, &cfg)),
+        ] {
+            assert!(
+                res.iterations < cfg.max_iterations,
+                "{gname}/{bname}: hit the iteration cap"
+            );
+            let diff = res.iterations.abs_diff(native.iterations);
+            assert!(
+                diff <= 2,
+                "{gname}/{bname}: {} iterations vs native {}",
+                res.iterations,
+                native.iterations
+            );
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Selection-policy and cost-model invariants.
+//!
+//! The coordinator's approach choice must be a *pure function* of the batch
+//! shape (deterministic — two replicas looking at the same update pick the
+//! same engine) and must degrade **monotonically**: as batches grow, the
+//! chosen approach can only move toward less incremental reuse (DF-P → ND
+//! → Static on `Approach::incrementality`), never back. The A100 cost model
+//! backing EXPERIMENTS.md gets the matching monotonicity checks: modeled
+//! time never decreases in vertices, edges, iterations, or affected work.
+
+use std::time::Duration;
+
+use pagerank_dynamic::coordinator::policy::{ApproachPolicy, HealthState, PolicyConfig};
+use pagerank_dynamic::costmodel::{
+    a100_time, frontier_iteration_bytes, full_iteration_bytes, model_frontier_run,
+    model_full_run,
+};
+use pagerank_dynamic::engines::Approach;
+
+#[test]
+fn choice_is_deterministic_for_fixed_batch_shape() {
+    // same shape in, same approach out — across calls and across replicas
+    let shapes = [
+        (0usize, 1_000_000usize, true),
+        (1, 1_000_000, true),
+        (50, 1_000_000, true),
+        (10_000, 1_000_000, true),
+        (10, 1_000, true),
+        (10, 1_000_000, false),
+        (0, 0, true), // empty graph: max(1) guard, no division by zero
+    ];
+    let a = ApproachPolicy::default();
+    let b = ApproachPolicy::new(PolicyConfig::default());
+    for &(len, edges, prev) in &shapes {
+        let first = a.choose(len, edges, prev);
+        for _ in 0..3 {
+            assert_eq!(a.choose(len, edges, prev), first, "same policy, same shape");
+        }
+        assert_eq!(b.choose(len, edges, prev), first, "replica agrees");
+    }
+}
+
+#[test]
+fn selection_degrades_monotonically_with_batch_size() {
+    // larger batches must never pick a MORE incremental approach: walking
+    // batch_len up at fixed |E|, incrementality is non-increasing
+    let p = ApproachPolicy::default();
+    for num_edges in [1_000usize, 100_000, 10_000_000] {
+        let mut last = u8::MAX;
+        let mut batch_len = 0usize;
+        while batch_len <= num_edges {
+            let inc = p.choose(batch_len, num_edges, true).incrementality();
+            assert!(
+                inc <= last,
+                "batch {batch_len}/{num_edges}: incrementality rose {last} -> {inc}"
+            );
+            last = inc;
+            batch_len = batch_len * 2 + 1;
+        }
+    }
+}
+
+#[test]
+fn monotonicity_survives_degraded_and_tripped_states() {
+    // the degraded/tripped policies pin ND for every batch size — trivially
+    // monotone, and never more incremental than the healthy choice
+    let healthy = ApproachPolicy::default();
+    let mut degraded = ApproachPolicy::default();
+    degraded.escalate(Approach::DynamicFrontierPruning);
+    assert_eq!(degraded.health(), HealthState::Degraded);
+    let mut tripped = ApproachPolicy::default();
+    tripped.observe_error(1.0);
+    assert!(tripped.error_tripped());
+    for p in [&degraded, &tripped] {
+        let mut last = u8::MAX;
+        for batch_len in [0usize, 1, 100, 10_000, 1_000_000] {
+            let a = p.choose(batch_len, 1_000_000, true);
+            assert_eq!(a, Approach::NaiveDynamic);
+            let inc = a.incrementality();
+            assert!(inc <= last);
+            assert!(
+                inc <= healthy.choose(batch_len, 1_000_000, true).incrementality(),
+                "unhealthy policy must not out-reuse the healthy one"
+            );
+            last = inc;
+        }
+    }
+}
+
+#[test]
+fn first_snapshot_always_recomputes() {
+    // has_previous = false dominates everything, at every batch size
+    let mut p = ApproachPolicy::default();
+    assert_eq!(p.choose(0, 1_000, false), Approach::Static);
+    p.observe_error(1.0);
+    p.escalate(Approach::NaiveDynamic);
+    assert_eq!(p.choose(1_000_000, 1_000, false), Approach::Static);
+    assert_eq!(Approach::Static.incrementality(), 0, "static reuses nothing");
+}
+
+#[test]
+fn incrementality_orders_the_ladder() {
+    // the scale matches the degradation ladder: every escalation strictly
+    // lowers incrementality until the ladder bottoms out at Static
+    let mut seen = Vec::new();
+    for a in Approach::ALL {
+        seen.push(a.incrementality());
+        let mut p = ApproachPolicy::default();
+        if let Some(fallback) = p.escalate(a) {
+            assert!(
+                fallback.incrementality() < a.incrementality(),
+                "{} -> {} must lose incrementality",
+                a.label(),
+                fallback.label()
+            );
+        } else {
+            assert_eq!(a, Approach::Static, "only Static has no fallback");
+        }
+    }
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), Approach::ALL.len(), "scale is a total order");
+}
+
+#[test]
+fn modeled_time_monotone_in_problem_size() {
+    // full-run model: non-decreasing in n, m and iterations
+    let base = model_full_run(1_000_000, 16_000_000, 50);
+    assert!(model_full_run(2_000_000, 16_000_000, 50) >= base);
+    assert!(model_full_run(1_000_000, 32_000_000, 50) >= base);
+    assert!(model_full_run(1_000_000, 16_000_000, 51) > base);
+    assert_eq!(model_full_run(0, 0, 0), Duration::ZERO);
+
+    // per-iteration byte counts: strictly increasing in each argument
+    assert!(full_iteration_bytes(1_001, 500) > full_iteration_bytes(1_000, 500));
+    assert!(full_iteration_bytes(1_000, 501) > full_iteration_bytes(1_000, 500));
+    let f = frontier_iteration_bytes(1_000, 10, 100);
+    assert!(frontier_iteration_bytes(1_001, 10, 100) > f);
+    assert!(frontier_iteration_bytes(1_000, 11, 100) > f);
+    assert!(frontier_iteration_bytes(1_000, 10, 101) > f);
+}
+
+#[test]
+fn frontier_model_bounded_by_full_model() {
+    // a frontier iteration touching the whole graph costs at least a full
+    // iteration's edge traffic, and shrinking affected work can only help
+    let n = 100_000usize;
+    let m = 1_600_000u64;
+    let all = model_frontier_run(n, (0..10).map(|_| (n, m)));
+    let some = model_frontier_run(n, (0..10).map(|_| (n / 100, m / 100)));
+    let none = model_frontier_run(n, (0..10).map(|_| (0usize, 0u64)));
+    assert!(none < some && some < all, "monotone in affected work");
+    let full = model_full_run(n, m as usize, 10);
+    // frontier-touching-everything adds the flag scan on top of full work
+    assert!(all >= full);
+    assert!(a100_time(0.0, 0) == Duration::ZERO);
+}

@@ -1,18 +1,24 @@
-//! Bitwise-equivalence harness for the persistent work-stealing pool.
+//! Bitwise-equivalence harness for the persistent work-stealing pool and
+//! the SIMD backends.
 //!
-//! The contract under test (see `util::par`): work decomposition depends
+//! Two contracts under test. From `util::par`: work decomposition depends
 //! only on input size, partial results land in chunk-indexed slots, and
 //! reductions fold those slots in ascending order — so the *execution*
 //! schedule (which lane ran which chunk, in what order, stolen or not) can
-//! never leak into the f64 ranks. These tests pin that contract three ways:
+//! never leak into the f64 ranks. From `util::simd`: every vectorized
+//! inner loop uses a fixed lane-tree reduction order shared by the scalar
+//! and vector backends — so the *instruction path* can't leak either.
+//! These tests pin both contracts three ways:
 //!
 //! 1. every engine × generator × thread count × execution mode (persistent
-//!    pool vs legacy per-region scoped spawn) produces ranks bitwise equal
-//!    to the single-threaded run;
+//!    pool vs legacy per-region scoped spawn) × SIMD backend (scalar vs
+//!    vector) produces ranks bitwise equal to the single-threaded scalar
+//!    run;
 //! 2. a seeded stress hook injecting per-chunk delays — forcing steals and
-//!    scrambling completion order — changes nothing;
-//! 3. a golden rank digest written per resolved thread count, diffed by
-//!    `ci.sh` across `PAGERANK_THREADS=1` and `PAGERANK_THREADS=8` runs.
+//!    scrambling completion order — changes nothing, on either backend;
+//! 3. a golden rank digest written per (resolved thread count, SIMD pin),
+//!    diffed by `ci.sh` across all four `PAGERANK_THREADS` ∈ {1, 8} ×
+//!    `PAGERANK_SIMD` ∈ {0, 1} combinations.
 
 use std::fmt::Write as _;
 
@@ -22,7 +28,7 @@ use pagerank_dynamic::engines::native::{naive_dynamic, static_pagerank};
 use pagerank_dynamic::engines::PagerankResult;
 use pagerank_dynamic::generators::{chain, er, grid, rmat};
 use pagerank_dynamic::graph::GraphBuilder;
-use pagerank_dynamic::util::par;
+use pagerank_dynamic::util::{digest, par, SimdPolicy};
 use pagerank_dynamic::{CsrGraph, PagerankConfig};
 
 /// Thread counts covering inline (1), fewer lanes than workers, a prime
@@ -58,7 +64,11 @@ fn scenario(mut b: GraphBuilder) -> Scenario {
     b.ensure_self_loops();
     let old_g = b.to_csr();
     let old_gt = old_g.transpose();
-    let cfg = PagerankConfig::default().with_threads(1);
+    // single-threaded *scalar* reference: the base bits every matrix cell —
+    // thread count, pool mode, SIMD backend — must reproduce exactly
+    let cfg = PagerankConfig::default()
+        .with_threads(1)
+        .with_simd(SimdPolicy::Scalar);
     let prev = static_pagerank(&old_g, &old_gt, &cfg, None).ranks;
     let upd = batch::random_batch(&b, 20, 0.7, 123);
     batch::apply(&mut b, &upd);
@@ -103,62 +113,87 @@ fn assert_bitwise(
     }
 }
 
-/// The full matrix: engines × generators × thread counts × execution modes,
-/// every cell bitwise equal to the single-threaded persistent-pool run.
+/// The full matrix: engines × generators × thread counts × execution modes
+/// × SIMD backends, every cell bitwise equal to the single-threaded scalar
+/// persistent-pool run.
 #[test]
-fn every_engine_is_bitwise_identical_across_threads_and_modes() {
+fn every_engine_is_bitwise_identical_across_threads_modes_and_backends() {
     for (gname, b) in generators() {
         let sc = scenario(b);
-        let base = run_all(&sc, &PagerankConfig::default().with_threads(1));
+        let base = run_all(
+            &sc,
+            &PagerankConfig::default()
+                .with_threads(1)
+                .with_simd(SimdPolicy::Scalar),
+        );
         for &t in &THREADS {
             for persistent in [true, false] {
-                let cfg = PagerankConfig::default()
-                    .with_threads(t)
-                    .with_pool_persistent(persistent);
-                let mode = if persistent { "pool" } else { "spawn" };
-                let got = run_all(&sc, &cfg);
-                assert_bitwise(&format!("{gname}/t{t}/{mode}"), &base, &got);
+                for simd in [SimdPolicy::Scalar, SimdPolicy::Vector] {
+                    let cfg = PagerankConfig::default()
+                        .with_threads(t)
+                        .with_pool_persistent(persistent)
+                        .with_simd(simd);
+                    let mode = if persistent { "pool" } else { "spawn" };
+                    let got = run_all(&sc, &cfg);
+                    assert_bitwise(
+                        &format!("{gname}/t{t}/{mode}/{}", simd.as_str()),
+                        &base,
+                        &got,
+                    );
+                }
             }
         }
     }
 }
 
 /// Seeded per-chunk delays scramble which lane finishes which chunk first,
-/// forcing steals in the middle of every region — results must not move.
+/// forcing steals in the middle of every region — results must not move,
+/// on either SIMD backend.
 #[test]
 fn forced_steals_under_stress_delays_change_nothing() {
     let sc = scenario(er::generate(30_000, 4.0, 21));
-    let base = run_all(&sc, &PagerankConfig::default().with_threads(1));
+    let base = run_all(
+        &sc,
+        &PagerankConfig::default()
+            .with_threads(1)
+            .with_simd(SimdPolicy::Scalar),
+    );
     for seed in [1u64, 2026] {
-        par::set_stress_delay(seed, 60);
-        let got = run_all(&sc, &PagerankConfig::default().with_threads(7));
-        par::set_stress_delay(0, 0);
-        assert_bitwise(&format!("stress/seed{seed}"), &base, &got);
+        for simd in [SimdPolicy::Scalar, SimdPolicy::Vector] {
+            par::set_stress_delay(seed, 60);
+            let got =
+                run_all(&sc, &PagerankConfig::default().with_threads(7).with_simd(simd));
+            par::set_stress_delay(0, 0);
+            assert_bitwise(&format!("stress/seed{seed}/{}", simd.as_str()), &base, &got);
+        }
     }
 }
 
 /// Write a digest of every engine's rank bits under the *resolved* thread
-/// count (so `PAGERANK_THREADS` applies). `ci.sh` runs the suite twice with
-/// the env pinned to 1 and 8 and diffs the two files: any schedule- or
-/// thread-dependent bit anywhere in the engine stack fails the gate.
+/// count and SIMD pin (so `PAGERANK_THREADS` and `PAGERANK_SIMD` apply —
+/// the config stays `Auto`). `ci.sh` runs the suite under all four
+/// {threads 1, 8} × {simd 0, 1} combinations and diffs the four files: any
+/// schedule-, thread- or instruction-path-dependent bit anywhere in the
+/// engine stack fails the gate. Hashing goes through
+/// `util::digest::fnv1a_ranks`, which normalizes `-0.0` so a semantically
+/// equal sign-of-zero bit can never fail the diff.
 #[test]
 fn write_golden_rank_digest() {
     let resolved = par::resolve(0);
+    let simd_pin = match std::env::var("PAGERANK_SIMD") {
+        Ok(s) if s.trim() == "0" => 0,
+        _ => 1,
+    };
     let mut out = String::new();
     for (gname, b) in generators() {
         let sc = scenario(b);
         for (ename, res) in run_all(&sc, &PagerankConfig::default()) {
-            let mut h: u64 = 0xcbf29ce484222325;
-            for x in &res.ranks {
-                for byte in x.to_bits().to_le_bytes() {
-                    h = (h ^ byte as u64).wrapping_mul(0x100000001b3);
-                }
-            }
+            let h = digest::fnv1a_ranks(&res.ranks);
             let _ = writeln!(out, "{gname} {ename} {h:016x} iters={}", res.iterations);
         }
     }
     // cwd of integration tests is the crate root (rust/); the workspace
     // build dir lives at ../target, so rust/target is ours alone.
     std::fs::create_dir_all("target").unwrap();
-    std::fs::write(format!("target/rank_digest_t{resolved}.txt"), out).unwrap();
+    std::fs::write(format!("target/rank_digest_t{resolved}_s{simd_pin}.txt"), out).unwrap();
 }
