@@ -130,7 +130,15 @@ fn native_kernel_sweep() {
                 std::hint::black_box(simd::gather_sum(be, &values, targets));
             }));
             record(&format!("contrib_block_{bname}"), 1, bench_ns(|| {
-                std::hint::black_box(simd::contrib_block(be, offsets, &values, 0, &mut out));
+                // packed CSR: row bounds are (offsets[..n], offsets[1..])
+                std::hint::black_box(simd::contrib_block(
+                    be,
+                    &offsets[..n],
+                    &offsets[1..],
+                    &values,
+                    0,
+                    &mut out,
+                ));
             }));
             record(&format!("l1_{bname}"), 1, bench_ns(|| {
                 std::hint::black_box(simd::l1(be, &values, &values2));

@@ -1,0 +1,111 @@
+//! Bench: per-update graph-maintenance latency, rebuild vs incremental.
+//!
+//! The quantity under test is `UpdateReport::maintenance` — everything the
+//! coordinator does to the graph per update (validation + builder apply +
+//! CSR upkeep + prev-snapshot bookkeeping), excluding the engine run. In
+//! rebuild mode that is dominated by the O(N + E) `to_csr()` + `transpose()`
+//! pair; in incremental mode by O(batch) patches on `graph::dyncsr`. Batch
+//! sizes 10 → 10k on ≥100k-edge graphs, written as machine-readable
+//! `BENCH_update_latency.json`; the headline claim is incremental ≥5x
+//! cheaper than rebuild for batches ≤1k.
+
+use std::fmt::Write as _;
+
+use pagerank_dynamic::batch;
+use pagerank_dynamic::coordinator::DynamicGraphService;
+use pagerank_dynamic::generators::{er, rmat};
+use pagerank_dynamic::graph::{CsrMode, GraphBuilder};
+use pagerank_dynamic::harness::fmt_dur;
+use pagerank_dynamic::PagerankConfig;
+
+const BATCH_SIZES: [usize; 4] = [10, 100, 1_000, 10_000];
+const REPS: usize = 3;
+
+fn graphs() -> Vec<(&'static str, GraphBuilder)> {
+    vec![
+        ("er-100k", er::generate(100_000, 8.0, 42)),
+        ("rmat-web-s16", rmat::generate(16, 8.0, rmat::RmatParams::WEB, 43)),
+    ]
+}
+
+fn main() {
+    let mut rows = String::new();
+    let mut first = true;
+    for (gname, b) in graphs() {
+        let mut shadow = b.clone();
+        shadow.ensure_self_loops();
+        let mk = |mode: CsrMode| {
+            DynamicGraphService::new(
+                b.clone(),
+                None,
+                PagerankConfig::default().with_csr_mode(mode),
+            )
+        };
+        let mut reb = mk(CsrMode::Rebuild);
+        let mut inc = mk(CsrMode::Incremental);
+        reb.ensure_ranks().unwrap();
+        inc.ensure_ranks().unwrap();
+        println!(
+            "graph {gname}: {} vertices, {} edges",
+            shadow.num_vertices(),
+            shadow.num_edges()
+        );
+        println!(
+            "{:>8} {:>14} {:>14} {:>9}",
+            "batch", "rebuild", "incremental", "speedup"
+        );
+
+        let mut seed = 5_000u64;
+        for size in BATCH_SIZES {
+            // mean over REPS identical batch sequences; both services see
+            // the same batches, so the graphs stay in lockstep throughout
+            let (mut reb_ns, mut inc_ns) = (0u128, 0u128);
+            for _ in 0..REPS {
+                seed += 1;
+                let upd = batch::random_batch(&shadow, size, 0.7, seed);
+                batch::apply(&mut shadow, &upd);
+                let rr = reb.apply_update(upd.clone()).unwrap();
+                let ri = inc.apply_update(upd).unwrap();
+                assert_eq!(rr.num_edges, ri.num_edges, "modes diverged");
+                reb_ns += rr.maintenance.as_nanos();
+                inc_ns += ri.maintenance.as_nanos();
+            }
+            let reb_mean = reb_ns as f64 / REPS as f64;
+            let inc_mean = inc_ns as f64 / REPS as f64;
+            let speedup = reb_mean / inc_mean.max(1.0);
+            println!(
+                "{:>8} {:>14} {:>14} {:>8.1}x",
+                size,
+                fmt_dur(std::time::Duration::from_nanos(reb_mean as u64)),
+                fmt_dur(std::time::Duration::from_nanos(inc_mean as u64)),
+                speedup
+            );
+            if !first {
+                rows.push_str(",\n");
+            }
+            first = false;
+            let _ = write!(
+                rows,
+                "    {{\"graph\": \"{gname}\", \"n\": {}, \"m\": {}, \"batch\": {size}, \
+                 \"reps\": {REPS}, \"rebuild_maintenance_ns\": {:.0}, \
+                 \"incremental_maintenance_ns\": {:.0}, \"speedup\": {speedup:.2}}}",
+                shadow.num_vertices(),
+                shadow.num_edges(),
+                reb_mean,
+                inc_mean
+            );
+        }
+        println!();
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"update_latency\",\n  \"metric\": \
+         \"UpdateReport.maintenance (graph upkeep per update, engine time excluded)\",\n  \
+         \"results\": [\n{rows}\n  ]\n}}\n"
+    );
+    if let Err(e) = std::fs::write("BENCH_update_latency.json", &json) {
+        eprintln!("could not write BENCH_update_latency.json: {e}");
+    } else {
+        println!("  -> BENCH_update_latency.json");
+    }
+}

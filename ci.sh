@@ -17,35 +17,40 @@ fi
 echo "=== cargo build --release ==="
 cargo build --release
 
-# Determinism gate: the worker-lane count (PAGERANK_THREADS) and the SIMD
+# Determinism gate: the worker-lane count (PAGERANK_THREADS), the SIMD
 # backend (PAGERANK_SIMD: 0 = portable scalar loops, 1 = detected vector
-# unit) are pinned per run. tests/pool_determinism.rs writes a digest of
-# every engine's rank bits to rust/target/rank_digest_t<N>_s<S>.txt; the
-# full suite runs on the two diagonal combos (t1/scalar, t8/vector) and
-# the determinism matrix alone fills in the off-diagonals, then all four
-# digests are diffed: any schedule-, thread-count- or instruction-path-
-# dependent bit anywhere in the stack fails the gate.
+# unit) and the CSR maintenance mode (PAGERANK_CSR: rebuild = per-update
+# to_csr + transpose, incremental = O(batch) dyncsr patches) are pinned per
+# run. tests/pool_determinism.rs writes a digest of every engine's — and
+# the serving coordinator's — rank bits to
+# rust/target/rank_digest_t<N>_s<S>_c<M>.txt; the full suite runs on two
+# diagonal combos and the determinism matrix alone fills in the
+# off-diagonals, then all digests are diffed: any schedule-, thread-count-,
+# instruction-path- or CSR-layout-dependent bit anywhere in the stack
+# fails the gate.
 rm -f rust/target/rank_digest_t*.txt
 
-echo "=== cargo test -q [PAGERANK_THREADS=1 PAGERANK_SIMD=0] (dev profile: debug assertions on) ==="
-PAGERANK_THREADS=1 PAGERANK_SIMD=0 cargo test -q
+echo "=== cargo test -q [PAGERANK_THREADS=1 PAGERANK_SIMD=0 PAGERANK_CSR=rebuild] (dev profile: debug assertions on) ==="
+PAGERANK_THREADS=1 PAGERANK_SIMD=0 PAGERANK_CSR=rebuild cargo test -q
 
-echo "=== cargo test -q [PAGERANK_THREADS=8 PAGERANK_SIMD=1] ==="
-PAGERANK_THREADS=8 PAGERANK_SIMD=1 cargo test -q
+echo "=== cargo test -q [PAGERANK_THREADS=8 PAGERANK_SIMD=1 PAGERANK_CSR=incremental] ==="
+PAGERANK_THREADS=8 PAGERANK_SIMD=1 PAGERANK_CSR=incremental cargo test -q
 
-echo "=== cargo test -q --test pool_determinism [PAGERANK_THREADS=1 PAGERANK_SIMD=1] ==="
-PAGERANK_THREADS=1 PAGERANK_SIMD=1 cargo test -q --test pool_determinism
+echo "=== cargo test -q --test pool_determinism [threads/simd/csr off-diagonals] ==="
+PAGERANK_THREADS=1 PAGERANK_SIMD=1 PAGERANK_CSR=incremental cargo test -q --test pool_determinism
+PAGERANK_THREADS=8 PAGERANK_SIMD=0 PAGERANK_CSR=rebuild cargo test -q --test pool_determinism
+PAGERANK_THREADS=1 PAGERANK_SIMD=0 PAGERANK_CSR=incremental cargo test -q --test pool_determinism
+PAGERANK_THREADS=8 PAGERANK_SIMD=1 PAGERANK_CSR=rebuild cargo test -q --test pool_determinism
 
-echo "=== cargo test -q --test pool_determinism [PAGERANK_THREADS=8 PAGERANK_SIMD=0] ==="
-PAGERANK_THREADS=8 PAGERANK_SIMD=0 cargo test -q --test pool_determinism
-
-echo "=== golden rank digest: threads {1,8} x simd {0,1} ==="
-for f in rust/target/rank_digest_t1_s1.txt \
-         rust/target/rank_digest_t8_s0.txt \
-         rust/target/rank_digest_t8_s1.txt; do
-    diff -u rust/target/rank_digest_t1_s0.txt "$f"
+echo "=== golden rank digest: threads {1,8} x simd {0,1} x csr {rebuild,incremental} ==="
+for f in rust/target/rank_digest_t8_s1_ci.txt \
+         rust/target/rank_digest_t1_s1_ci.txt \
+         rust/target/rank_digest_t8_s0_cr.txt \
+         rust/target/rank_digest_t1_s0_ci.txt \
+         rust/target/rank_digest_t8_s1_cr.txt; do
+    diff -u rust/target/rank_digest_t1_s0_cr.txt "$f"
 done
-echo "rank digests identical across thread counts and SIMD backends"
+echo "rank digests identical across thread counts, SIMD backends and CSR modes"
 
 echo "=== cargo test -q --test robustness (fault-injection suite) ==="
 cargo test -q --test robustness

@@ -96,7 +96,7 @@ impl Checkpoint {
         let mut s = String::with_capacity(32 + self.edges.len() * 8);
         let _ = write!(
             s,
-            "{{\"format\":1,\"seq\":{},\"num_vertices\":{},\"cfg\":{{\"alpha\":{},\"tau\":{},\"tau_frontier\":{},\"tau_prune\":{},\"max_iterations\":{},\"threads\":{},\"pool_persistent\":{},\"simd\":\"{}\"}}",
+            "{{\"format\":1,\"seq\":{},\"num_vertices\":{},\"cfg\":{{\"alpha\":{},\"tau\":{},\"tau_frontier\":{},\"tau_prune\":{},\"max_iterations\":{},\"threads\":{},\"pool_persistent\":{},\"simd\":\"{}\",\"csr\":\"{}\"}}",
             self.seq,
             self.num_vertices,
             self.cfg.alpha,
@@ -106,7 +106,8 @@ impl Checkpoint {
             self.cfg.max_iterations,
             self.cfg.threads,
             self.cfg.pool_persistent,
-            self.cfg.simd.as_str()
+            self.cfg.simd.as_str(),
+            self.cfg.csr_mode.as_str()
         );
         s.push_str(",\"edges\":");
         write_edge_pairs(&mut s, &self.edges);
@@ -130,7 +131,7 @@ impl Checkpoint {
         let m = &self.metrics;
         let _ = write!(
             s,
-            ",\"counters\":{{\"updates_applied\":{},\"edges_inserted\":{},\"edges_deleted\":{},\"device_runs\":{},\"native_fallbacks\":{},\"quarantined_edits\":{},\"watchdog_trips\":{},\"health_recoveries\":{},\"restores\":{}}}}}",
+            ",\"counters\":{{\"updates_applied\":{},\"edges_inserted\":{},\"edges_deleted\":{},\"device_runs\":{},\"native_fallbacks\":{},\"quarantined_edits\":{},\"watchdog_trips\":{},\"health_recoveries\":{},\"restores\":{},\"maintenance_ns\":{}}}}}",
             m.updates_applied,
             m.edges_inserted,
             m.edges_deleted,
@@ -139,7 +140,8 @@ impl Checkpoint {
             m.quarantined_edits,
             m.watchdog_trips,
             m.health_recoveries,
-            m.restores
+            m.restores,
+            m.maintenance_ns
         );
         s
     }
@@ -170,6 +172,13 @@ impl Checkpoint {
                 .and_then(|s| s.as_str().ok())
                 .and_then(crate::util::SimdPolicy::parse)
                 .unwrap_or_default(),
+            // absent in pre-incremental-CSR documents: default Auto
+            csr_mode: c
+                .get("csr")
+                .ok()
+                .and_then(|s| s.as_str().ok())
+                .and_then(crate::graph::CsrMode::parse)
+                .unwrap_or_default(),
         };
         let edges = parse_edge_pairs(&v, "edges")?;
         let prev_missing = parse_edge_pairs(&v, "prev_missing")?;
@@ -196,6 +205,9 @@ impl Checkpoint {
         metrics.watchdog_trips = k.get("watchdog_trips")?.as_usize()?;
         metrics.health_recoveries = k.get("health_recoveries")?.as_usize()?;
         metrics.restores = k.get("restores")?.as_usize()?;
+        // absent in pre-incremental-CSR documents: counter starts at zero
+        metrics.maintenance_ns =
+            k.get("maintenance_ns").ok().and_then(|x| x.as_usize().ok()).unwrap_or(0) as u64;
 
         let cp = Checkpoint {
             seq,
@@ -322,6 +334,28 @@ mod tests {
         assert!(!doc.contains("simd"));
         let back = Checkpoint::from_json(&doc).unwrap();
         assert_eq!(back.cfg.simd, SimdPolicy::Auto);
+    }
+
+    #[test]
+    fn csr_mode_and_maintenance_roundtrip_and_old_documents_default() {
+        use crate::graph::CsrMode;
+        use std::time::Duration;
+        let mut cp = sample();
+        cp.cfg = cp.cfg.with_csr_mode(CsrMode::Rebuild);
+        cp.metrics.record_maintenance(Duration::from_nanos(12_345));
+        let back = Checkpoint::from_json(&cp.to_json()).unwrap();
+        assert_eq!(back.cfg.csr_mode, CsrMode::Rebuild);
+        assert_eq!(back.metrics.maintenance_ns, 12_345);
+        // pre-incremental-CSR documents (format 1, no "csr"/"maintenance_ns"
+        // keys) stay loadable and fall back to the defaults
+        let doc = cp
+            .to_json()
+            .replace(",\"csr\":\"rebuild\"", "")
+            .replace(",\"maintenance_ns\":12345", "");
+        assert!(!doc.contains("csr") && !doc.contains("maintenance_ns"));
+        let back = Checkpoint::from_json(&doc).unwrap();
+        assert_eq!(back.cfg.csr_mode, CsrMode::Auto);
+        assert_eq!(back.metrics.maintenance_ns, 0);
     }
 
     #[test]

@@ -48,6 +48,10 @@ pub struct Metrics {
     pub health_recoveries: usize,
     /// Times this service was rebuilt from a checkpoint.
     pub restores: usize,
+    /// Total nanoseconds spent maintaining the graph structures per update
+    /// (batch validation/apply, CSR maintenance or rebuild + transpose,
+    /// previous-snapshot bookkeeping) — everything outside the engine run.
+    pub maintenance_ns: u64,
     pub per_approach: HashMap<Approach, ApproachStats>,
 }
 
@@ -72,6 +76,10 @@ impl Metrics {
 
     pub fn record_restore(&mut self) {
         self.restores += 1;
+    }
+
+    pub fn record_maintenance(&mut self, d: Duration) {
+        self.maintenance_ns = self.maintenance_ns.saturating_add(d.as_nanos() as u64);
     }
 
     pub fn record_run(
@@ -106,6 +114,10 @@ impl Metrics {
             self.watchdog_trips,
             self.health_recoveries,
             self.restores
+        ));
+        parts.push(format!(
+            "maintenance: {:.2?}",
+            Duration::from_nanos(self.maintenance_ns)
         ));
         let mut keys: Vec<_> = self.per_approach.keys().copied().collect();
         keys.sort_by_key(|a| a.label());
@@ -158,5 +170,17 @@ mod tests {
         assert!(s.contains("watchdog_trips=2"), "{s}");
         assert!(s.contains("recoveries=1"), "{s}");
         assert!(s.contains("restores=1"), "{s}");
+    }
+
+    #[test]
+    fn maintenance_accumulates_and_shows_in_summary() {
+        let mut m = Metrics::default();
+        m.record_maintenance(Duration::from_micros(300));
+        m.record_maintenance(Duration::from_micros(700));
+        assert_eq!(m.maintenance_ns, 1_000_000);
+        assert!(m.summary().contains("maintenance:"), "{}", m.summary());
+        m.maintenance_ns = u64::MAX - 10;
+        m.record_maintenance(Duration::from_secs(1));
+        assert_eq!(m.maintenance_ns, u64::MAX, "saturates, never wraps");
     }
 }

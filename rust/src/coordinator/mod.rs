@@ -38,7 +38,7 @@ pub mod server;
 
 use std::collections::HashSet;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -46,7 +46,7 @@ use crate::batch::{self, BatchUpdate, Rejection};
 use crate::engines::config::PagerankConfig;
 use crate::engines::device::DeviceEngine;
 use crate::engines::{native, Approach, PagerankResult};
-use crate::graph::{CsrGraph, GraphBuilder, VertexId};
+use crate::graph::{CsrGraph, DynCsr, GraphBuilder, VertexId};
 use crate::runtime::ArtifactStore;
 use crate::util::par;
 
@@ -76,14 +76,27 @@ pub struct UpdateReport {
     /// Whether the policy is in degraded (conservative) mode after this
     /// update.
     pub degraded: bool,
+    /// Time spent on graph maintenance (batch apply + CSR/transpose upkeep
+    /// + prev-snapshot bookkeeping), separate from `elapsed` (engine time).
+    /// In incremental CSR mode this is O(batch); in rebuild mode O(N + E).
+    pub maintenance: Duration,
 }
 
 /// The coordinator service. Single-writer: wrap in the [`server`] loop for
 /// concurrent access.
 pub struct DynamicGraphService {
     builder: GraphBuilder,
-    /// CSR of the previous snapshot (DT marks reachability in old ∪ new).
-    prev_csr: CsrGraph,
+    /// Incrementally-maintained G/Gᵀ (`graph::dyncsr`): `Some` in
+    /// incremental CSR mode, kept in lockstep with `builder` by
+    /// `apply_update`; `None` in rebuild mode (legacy per-update
+    /// `to_csr()` + `transpose()`).
+    dyn_graph: Option<DynCsr>,
+    /// Edge delta from the current builder back to the *previous* snapshot
+    /// (the graph DT marks old-side reachability in):
+    /// `prev = current − prev_missing + prev_extra`. O(batch) to maintain;
+    /// the CSR is materialized only when DT actually runs.
+    prev_missing: HashSet<(VertexId, VertexId)>,
+    prev_extra: HashSet<(VertexId, VertexId)>,
     ranks: Option<Vec<f64>>,
     store: Option<Arc<ArtifactStore>>,
     pub cfg: PagerankConfig,
@@ -106,13 +119,17 @@ impl DynamicGraphService {
         cfg: PagerankConfig,
     ) -> Self {
         builder.ensure_self_loops();
-        let prev_csr = builder.to_csr();
+        let cfg = cfg.sanitized();
+        let dyn_graph =
+            cfg.csr_mode.resolve_incremental().then(|| DynCsr::from_builder(&builder));
         Self {
             builder,
-            prev_csr,
+            dyn_graph,
+            prev_missing: HashSet::new(),
+            prev_extra: HashSet::new(),
             ranks: None,
             store,
-            cfg: cfg.sanitized(),
+            cfg,
             policy: ApproachPolicy::default(),
             metrics: Metrics::default(),
             health: HealthConfig::default(),
@@ -133,18 +150,33 @@ impl DynamicGraphService {
             builder.insert_edge(u, v);
         }
         builder.ensure_self_loops();
-        // Rebuild the *previous* snapshot from the checkpointed delta so
+        // Re-seed the *previous*-snapshot delta from the checkpoint so
         // Dynamic Traversal (which BFS-marks over old ∪ new) stays exact
-        // across a restore instead of silently seeing old == new.
-        let prev_csr = CsrGraph::from_edges(cp.num_vertices, &cp.prev_edges());
+        // across a restore instead of silently seeing old == new. Any
+        // self-loops `ensure_self_loops` added beyond `cp.edges` (possible
+        // only in hand-crafted checkpoints) are new relative to the
+        // previous snapshot, so they join `prev_missing`.
+        let mut prev_missing: HashSet<(VertexId, VertexId)> =
+            cp.prev_missing.iter().copied().collect();
+        let cp_set: HashSet<(VertexId, VertexId)> = cp.edges.iter().copied().collect();
+        for e in builder.edges() {
+            if !cp_set.contains(&e) {
+                prev_missing.insert(e);
+            }
+        }
+        let cfg = cp.cfg.sanitized();
+        let dyn_graph =
+            cfg.csr_mode.resolve_incremental().then(|| DynCsr::from_builder(&builder));
         let mut metrics = cp.metrics.clone();
         metrics.record_restore();
         Ok(Self {
             builder,
-            prev_csr,
+            dyn_graph,
+            prev_missing,
+            prev_extra: cp.prev_extra.iter().copied().collect(),
             ranks: cp.ranks.clone(),
             store,
-            cfg: cp.cfg.sanitized(),
+            cfg,
             policy: ApproachPolicy::default(),
             metrics,
             health: HealthConfig::default(),
@@ -156,14 +188,14 @@ impl DynamicGraphService {
     /// Snapshot the current state for later [`restore`](Self::restore).
     /// Alongside the current edge list this records the delta to the
     /// previous snapshot (`prev_missing` / `prev_extra`), so a restored
-    /// service reconstructs `prev_csr` exactly and DT keeps its old-graph
+    /// service reconstructs the previous snapshot exactly and DT keeps its old-graph
     /// reachability after a respawn.
     pub fn checkpoint(&self) -> Checkpoint {
         let edges: Vec<(VertexId, VertexId)> = self.builder.edges().collect();
-        let cur: HashSet<(VertexId, VertexId)> = edges.iter().copied().collect();
-        let prev: HashSet<(VertexId, VertexId)> = self.prev_csr.edges().collect();
-        let mut prev_missing: Vec<_> = cur.difference(&prev).copied().collect();
-        let mut prev_extra: Vec<_> = prev.difference(&cur).copied().collect();
+        // The delta is maintained directly (O(batch)), not recomputed by an
+        // O(E) set diff per capture; sorted for a canonical snapshot.
+        let mut prev_missing: Vec<_> = self.prev_missing.iter().copied().collect();
+        let mut prev_extra: Vec<_> = self.prev_extra.iter().copied().collect();
         prev_missing.sort_unstable();
         prev_extra.sort_unstable();
         Checkpoint {
@@ -218,28 +250,73 @@ impl DynamicGraphService {
         idx.into_iter().take(k).map(|v| (v, r[v as usize])).collect()
     }
 
+    /// Fold the applied clean batch into the previous-snapshot delta,
+    /// keeping `prev = current − prev_missing + prev_extra` pointing at the
+    /// same graph it pointed at before the batch. Every clean edit is
+    /// guaranteed applied ([`batch::validate`]), so parity is exact.
+    fn absorb_prev_delta(&mut self, clean: &BatchUpdate) {
+        for &e in &clean.deletions {
+            // prev still has e unless it only existed since the snapshot
+            if !self.prev_missing.remove(&e) {
+                self.prev_extra.insert(e);
+            }
+        }
+        for &e in &clean.insertions {
+            // prev lacks e unless it had it before a post-snapshot deletion
+            if !self.prev_extra.remove(&e) {
+                self.prev_missing.insert(e);
+            }
+        }
+    }
+
+    /// Materialize the previous-snapshot CSR from the maintained delta —
+    /// O(E log E), paid only when Dynamic Traversal actually needs the old
+    /// graph (never on the DF-P/DF/ND/Static paths).
+    fn materialize_prev(&self) -> CsrGraph {
+        let mut edges: Vec<(VertexId, VertexId)> = self
+            .builder
+            .edges()
+            .filter(|e| !self.prev_missing.contains(e))
+            .chain(self.prev_extra.iter().copied())
+            .collect();
+        edges.sort_unstable();
+        edges.dedup();
+        CsrGraph::from_edges(self.builder.num_vertices(), &edges)
+    }
+
     /// Run one approach against the current graph, preferring the device
-    /// engine when the graph fits a tier.
+    /// engine when the graph fits a tier. `prev_graph` is the previous
+    /// snapshot — required by (and only by) Dynamic Traversal.
     fn run(
         &self,
         approach: Approach,
         g: &CsrGraph,
         gt: &CsrGraph,
+        prev_graph: Option<&CsrGraph>,
         batch: &BatchUpdate,
     ) -> Result<(PagerankResult, bool)> {
         let prev = self.ranks.as_deref();
         let need_prev = |label: &str| {
             prev.ok_or_else(|| anyhow!("{label} requires previous ranks"))
         };
+        let old_graph = |label: &str| {
+            prev_graph.ok_or_else(|| anyhow!("{label} requires the previous graph snapshot"))
+        };
         if let Some(store) = &self.store {
             if store.tier_for(g.num_vertices(), g.num_edges()).is_some() {
                 let dg = store.pack_graph(g, gt)?;
                 let eng = DeviceEngine::new(store);
+                // Only the DT arm reads the old graph; every other approach
+                // gets the current graph as a placeholder it never touches.
+                let g_old = match approach {
+                    Approach::DynamicTraversal => old_graph("device DT")?,
+                    _ => g,
+                };
                 let res = eng.run_approach(
                     approach,
                     &dg,
                     g,
-                    &self.prev_csr,
+                    g_old,
                     &self.cfg,
                     prev,
                     batch,
@@ -255,7 +332,7 @@ impl DynamicGraphService {
             Approach::DynamicTraversal => native::dynamic::dynamic_traversal(
                 g,
                 gt,
-                &self.prev_csr,
+                old_graph("DT")?,
                 &self.cfg,
                 need_prev("DT")?,
                 batch,
@@ -283,20 +360,22 @@ impl DynamicGraphService {
     /// Compute the initial ranks (Static) if none exist yet.
     pub fn ensure_ranks(&mut self) -> Result<UpdateReport> {
         if self.ranks.is_some() {
-            let g = self.builder.to_csr();
+            // Counts come straight from the builder — no CSR rebuild for a
+            // report-only fast path.
             return Ok(UpdateReport {
                 approach: Approach::Static,
                 on_device: false,
                 iterations: 0,
                 elapsed: Duration::ZERO,
                 initially_affected: 0,
-                num_vertices: g.num_vertices(),
-                num_edges: g.num_edges(),
+                num_vertices: self.builder.num_vertices(),
+                num_edges: self.builder.num_edges(),
                 edges_changed: 0,
                 quarantined: 0,
                 rejections: Vec::new(),
                 watchdog_trips: 0,
                 degraded: self.degraded(),
+                maintenance: Duration::ZERO,
             });
         }
         self.apply_update(BatchUpdate::default())
@@ -378,21 +457,53 @@ impl DynamicGraphService {
         let clean = validated.clean;
         let rejections = validated.rejections;
 
-        let old_csr = self.builder.to_csr();
+        // --- Graph maintenance (timed separately from engine work) ---
+        // Apply the clean batch to the builder, fold it into the
+        // previous-snapshot delta (so the delta keeps pointing at the graph
+        // the last update ran against, even if an engine error exits below),
+        // and bring the CSR views up to date: O(batch) patches on the
+        // incremental structure, or a full rebuild + transpose in legacy
+        // mode.
+        let maint_start = Instant::now();
         let edges_changed = batch::apply(&mut self.builder, &clean);
-        let g = self.builder.to_csr();
-        let gt = g.transpose();
+        self.absorb_prev_delta(&clean);
+        if let Some(dc) = &mut self.dyn_graph {
+            let dc_changed = dc.apply_batch(&clean);
+            debug_assert_eq!(dc_changed, edges_changed, "DynCsr diverged from builder");
+        }
+        let rebuilt: Option<(CsrGraph, CsrGraph)> = if self.dyn_graph.is_none() {
+            let g = self.builder.to_csr();
+            let gt = g.transpose();
+            Some((g, gt))
+        } else {
+            None
+        };
 
         let mut approach = force.unwrap_or_else(|| {
-            self.policy.choose(clean.len(), g.num_edges(), self.ranks.is_some())
+            self.policy
+                .choose(clean.len(), self.builder.num_edges(), self.ranks.is_some())
         });
+        // The previous snapshot is only consulted by Dynamic Traversal, and
+        // the ladder never escalates *into* DT — materialize it lazily.
+        let prev_graph: Option<CsrGraph> =
+            matches!(approach, Approach::DynamicTraversal)
+                .then(|| self.materialize_prev());
+        let maintenance = maint_start.elapsed();
+        self.metrics.record_maintenance(maintenance);
+
+        let (g, gt) = match (&self.dyn_graph, &rebuilt) {
+            (Some(dc), _) => dc.graphs(),
+            (None, Some((g, gt))) => (g, gt),
+            (None, None) => unreachable!("one CSR source always exists"),
+        };
         let mut trips = 0usize;
         // Degradation ladder: re-run with a more conservative approach until
         // the watchdog accepts the result (at most 3 runs: DF-P → ND →
         // Static). The last-known-good ranks in `self.ranks` are untouched
         // until a healthy result breaks the loop.
         let (res, on_device, approach) = loop {
-            let (mut res, on_device) = self.run(approach, &g, &gt, &clean)?;
+            let (mut res, on_device) =
+                self.run(approach, g, gt, prev_graph.as_ref(), &clean)?;
             if let Some(fault) = result_fault.take() {
                 match fault {
                     Fault::CorruptRanks { nans } => {
@@ -445,9 +556,16 @@ impl DynamicGraphService {
             rejections,
             watchdog_trips: trips,
             degraded: self.degraded(),
+            maintenance,
         };
         self.ranks = Some(res.ranks);
-        self.prev_csr = old_csr;
+        // Healthy result installed: the previous snapshot advances to the
+        // pre-batch graph — exactly the inverse of the clean batch relative
+        // to the current builder (the delta-form of the old
+        // `prev_csr = old_csr` assignment).
+        self.prev_missing.clear();
+        self.prev_extra.clear();
+        self.absorb_prev_delta(&clean);
         Ok(report)
     }
 
@@ -456,9 +574,23 @@ impl DynamicGraphService {
     /// health-checked like any other: a failed refresh keeps the
     /// last-known-good ranks and the degraded policy state.
     pub fn refresh_static(&mut self) -> Result<UpdateReport> {
-        let g = self.builder.to_csr();
-        let gt = g.transpose();
-        let (res, on_device) = self.run(Approach::Static, &g, &gt, &BatchUpdate::default())?;
+        let maint_start = Instant::now();
+        let rebuilt: Option<(CsrGraph, CsrGraph)> = if self.dyn_graph.is_none() {
+            let g = self.builder.to_csr();
+            let gt = g.transpose();
+            Some((g, gt))
+        } else {
+            None
+        };
+        let maintenance = maint_start.elapsed();
+        self.metrics.record_maintenance(maintenance);
+        let (g, gt) = match (&self.dyn_graph, &rebuilt) {
+            (Some(dc), _) => dc.graphs(),
+            (None, Some((g, gt))) => (g, gt),
+            (None, None) => unreachable!("one CSR source always exists"),
+        };
+        let (res, on_device) =
+            self.run(Approach::Static, g, gt, None, &BatchUpdate::default())?;
         let violations = health::check_ranks(
             &res.ranks,
             g.num_vertices(),
@@ -486,6 +618,7 @@ impl DynamicGraphService {
             rejections: Vec::new(),
             watchdog_trips: 0,
             degraded: false,
+            maintenance,
         };
         self.ranks = Some(res.ranks);
         Ok(report)
@@ -604,6 +737,50 @@ mod tests {
         assert_eq!(s.num_edges(), m0, "graph untouched by garbage");
         assert_eq!(s.metrics.quarantined_edits, 4);
         assert_eq!(rep.rejections.len(), 4);
+    }
+
+    #[test]
+    fn incremental_and_rebuild_modes_agree_bitwise() {
+        use crate::graph::CsrMode;
+        let mk = |mode| {
+            DynamicGraphService::new(
+                er::generate(400, 5.0, 21),
+                None,
+                PagerankConfig::default().with_csr_mode(mode),
+            )
+        };
+        let mut inc = mk(CsrMode::Incremental);
+        let mut reb = mk(CsrMode::Rebuild);
+        inc.ensure_ranks().unwrap();
+        reb.ensure_ranks().unwrap();
+        for seed in 0..6 {
+            // identical builders, so one generated batch is valid for both
+            let batch = batch::random_batch(&inc.builder, 12, 0.75, seed);
+            let ri = inc.apply_update(batch.clone()).unwrap();
+            let rr = reb.apply_update(batch).unwrap();
+            assert_eq!(ri.approach, rr.approach, "seed {seed}");
+            assert_eq!(ri.iterations, rr.iterations, "seed {seed}");
+            for (x, y) in inc.ranks().unwrap().iter().zip(reb.ranks().unwrap()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn forced_dt_materializes_the_previous_snapshot() {
+        let mut s = DynamicGraphService::new(
+            er::generate(300, 4.0, 13),
+            None,
+            PagerankConfig::default().with_csr_mode(crate::graph::CsrMode::Incremental),
+        );
+        s.ensure_ranks().unwrap();
+        let b1 = batch::random_batch(&s.builder, 4, 0.8, 1);
+        s.apply_update(b1).unwrap();
+        // forcing DT exercises materialize_prev (the lazy old-graph path)
+        let b2 = batch::random_batch(&s.builder, 4, 0.8, 2);
+        let rep = s.apply_update_with(b2, Approach::DynamicTraversal).unwrap();
+        assert_eq!(rep.approach, Approach::DynamicTraversal);
+        assert!(rep.initially_affected > 0);
     }
 
     #[test]

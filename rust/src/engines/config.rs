@@ -1,5 +1,6 @@
 //! PageRank configuration — the paper's Section 5.1.2 settings as defaults.
 
+use crate::graph::CsrMode;
 use crate::util::simd::SimdPolicy;
 use std::fmt;
 
@@ -64,6 +65,13 @@ pub struct PagerankConfig {
     /// identical at every setting — both backends obey the same fixed
     /// lane-tree reduction order; only wall-clock changes.
     pub simd: SimdPolicy,
+    /// CSR maintenance mode for the coordinator's update path
+    /// (`graph::dyncsr`): `Auto` (the default) maintains G/Gᵀ incrementally
+    /// in O(batch) unless the `PAGERANK_CSR=rebuild` environment pin forces
+    /// the legacy per-update full rebuild + transpose; `Rebuild`/
+    /// `Incremental` override the environment. Ranks are bitwise identical
+    /// in both modes (sorted-row contract); only maintenance cost changes.
+    pub csr_mode: CsrMode,
 }
 
 impl Default for PagerankConfig {
@@ -77,6 +85,7 @@ impl Default for PagerankConfig {
             threads: 0,
             pool_persistent: true,
             simd: SimdPolicy::Auto,
+            csr_mode: CsrMode::Auto,
         }
     }
 }
@@ -102,6 +111,11 @@ impl PagerankConfig {
     /// This configuration with an explicit SIMD backend policy.
     pub fn with_simd(self, simd: SimdPolicy) -> Self {
         Self { simd, ..self }
+    }
+
+    /// This configuration with an explicit CSR maintenance mode.
+    pub fn with_csr_mode(self, csr_mode: CsrMode) -> Self {
+        Self { csr_mode, ..self }
     }
 
     /// Check every field for values no engine can run with (NaN tolerances,
@@ -151,6 +165,7 @@ impl PagerankConfig {
             threads: self.threads,
             pool_persistent: self.pool_persistent,
             simd: self.simd,
+            csr_mode: self.csr_mode,
         }
     }
 }
@@ -170,6 +185,7 @@ mod tests {
         assert_eq!(c.threads, 0, "0 = use available parallelism");
         assert!(c.pool_persistent, "persistent stealing pool is the default");
         assert_eq!(c.simd, SimdPolicy::Auto, "SIMD auto-detect is the default");
+        assert_eq!(c.csr_mode, CsrMode::Auto, "incremental CSR is the default");
         assert!(crate::util::par::resolve(c.threads) >= 1);
     }
 
@@ -184,6 +200,9 @@ mod tests {
         let c = c.with_simd(SimdPolicy::Scalar);
         assert_eq!(c.simd, SimdPolicy::Scalar);
         assert_eq!(c.threads, 4, "other fields untouched");
+        let c = c.with_csr_mode(CsrMode::Rebuild);
+        assert_eq!(c.csr_mode, CsrMode::Rebuild);
+        assert_eq!(c.simd, SimdPolicy::Scalar, "other fields untouched");
     }
 
     #[test]
@@ -214,6 +233,7 @@ mod tests {
             threads: 3,
             pool_persistent: false,
             simd: SimdPolicy::Vector,
+            csr_mode: CsrMode::Rebuild,
         }
         .sanitized();
         assert!(c.validate().is_ok());
@@ -225,6 +245,7 @@ mod tests {
         assert_eq!(c.threads, 3);
         assert!(!c.pool_persistent, "mode knob passes through untouched");
         assert_eq!(c.simd, SimdPolicy::Vector, "simd knob passes through untouched");
+        assert_eq!(c.csr_mode, CsrMode::Rebuild, "csr knob passes through untouched");
         let good = PagerankConfig::default().with_threads(2);
         assert_eq!(good.sanitized(), good, "valid config untouched");
     }

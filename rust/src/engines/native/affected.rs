@@ -72,14 +72,32 @@ pub fn expand_affected_threads(dv: &mut [u8], dn: &[u8], g: &CsrGraph, threads: 
         expand_affected(dv, dn, g);
         return;
     }
-    let offsets = g.offsets();
-    let targets = g.targets();
 
     // SAFETY: AtomicU8 has the same in-memory representation as u8, and the
     // exclusive borrow of `dv` is held for the whole region — reinterpreting
     // it as a shared atomic view is sound, and the pool's completion barrier
     // orders every mark before the caller reads `dv` again.
     let flags: &[AtomicU8] = unsafe { &*(dv as *mut [u8] as *const [AtomicU8]) };
+
+    if !g.is_packed() {
+        // Slack layout: offsets are not monotone after row relocations, so
+        // the edge-array partition below doesn't apply. Partition by vertex
+        // instead — marks are idempotent `1` stores, so any decomposition
+        // yields the same final flag set.
+        let n = g.num_vertices();
+        par::par_for_index(threads, par::DEFAULT_BLOCK, n, |lo, hi| {
+            for u in lo..hi {
+                if dn[u] != 0 {
+                    for &v in g.neighbors(u as u32) {
+                        flags[v as usize].store(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        });
+        return;
+    }
+    let offsets = g.offsets();
+    let targets = g.targets();
 
     par::par_for_index(threads, EXPAND_EDGE_BLOCK, m, |lo, hi| {
         // last row whose edge range starts at or before lo

@@ -51,8 +51,10 @@ use crate::graph::{partition_by_degree, CsrGraph};
 use crate::util::par;
 use crate::util::simd::{self, Backend};
 
-/// In-degree above which a vertex takes the hub (edge-chunked) path.
-pub(crate) const HUB_IN_DEGREE: u32 = 1024;
+/// In-degree above which a vertex takes the hub (edge-chunked) path. Shared
+/// with `graph::dyncsr`, which maintains the hub list incrementally at this
+/// exact threshold so `StepPlan::build` can skip the degree scan.
+pub(crate) const HUB_IN_DEGREE: u32 = crate::graph::dyncsr::HUB_DEGREE_THRESHOLD;
 
 /// Fixed in-edge chunk size for hub partial sums. Independent of the thread
 /// count, so the summation tree — and hence the floating-point result — is
@@ -85,15 +87,28 @@ pub(crate) struct StepPlan {
 impl StepPlan {
     pub(crate) fn build(gt: &CsrGraph, threads: usize, backend: Backend) -> StepPlan {
         let threads = par::resolve(threads);
-        let p = partition_by_degree(&gt.degrees(), HUB_IN_DEGREE);
-        let hubs: Vec<u32> = p.high().to_vec();
+        // Prefer the incrementally-maintained hub cache (graph::dyncsr);
+        // fall back to the Algorithm-4 partition scan. Both produce the
+        // high-degree vertices in ascending id order.
+        let hubs: Vec<u32> = match gt.cached_hubs(HUB_IN_DEGREE) {
+            Some(cached) => {
+                debug_assert_eq!(
+                    cached,
+                    partition_by_degree(&gt.degrees(), HUB_IN_DEGREE).high(),
+                    "stale hub cache"
+                );
+                cached.to_vec()
+            }
+            None => partition_by_degree(&gt.degrees(), HUB_IN_DEGREE).high().to_vec(),
+        };
         let mut items = Vec::new();
         let mut item_start = Vec::with_capacity(hubs.len() + 1);
         item_start.push(0);
-        let offsets = gt.offsets();
         for (h, &v) in hubs.iter().enumerate() {
-            let end = offsets[v as usize + 1] as usize;
-            let mut lo = offsets[v as usize] as usize;
+            // Chunk boundaries are relative to the row start, so packed and
+            // slack layouts decompose a hub identically.
+            let end = gt.row_end(v as usize);
+            let mut lo = gt.row_start(v as usize);
             while lo < end {
                 let hi = (lo + HUB_EDGE_CHUNK).min(end);
                 items.push((h as u32, lo, hi));
@@ -149,14 +164,14 @@ pub(crate) fn compute_contrib(
     r: &[f64],
     contrib: &mut [f64],
 ) -> f64 {
-    let offsets = g.offsets();
+    let (starts, ends) = g.row_bounds();
     par::par_reduce(
         threads,
         par::DEFAULT_BLOCK,
         contrib,
         0.0,
         |a, b| a + b,
-        |start, out| simd::contrib_block(be, offsets, r, start, out),
+        |start, out| simd::contrib_block(be, starts, ends, r, start, out),
     )
 }
 

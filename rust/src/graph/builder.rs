@@ -7,8 +7,15 @@
 
 use super::{CsrGraph, VertexId};
 
-/// Mutable out-adjacency with O(deg) edge insert/remove and duplicate
+/// Mutable out-adjacency with O(log deg) membership tests and duplicate
 /// detection (static edge semantics: at most one copy of each (u, v)).
+///
+/// **Sorted-row invariant:** every adjacency row is kept sorted ascending.
+/// This makes `has_edge`/`insert_edge`/`remove_edge` binary searches (hubs
+/// in batch validation stop being quadratic) and is the neighbor-order
+/// determinism contract: `to_csr()` emits the same sorted rows the
+/// incremental [`DynCsr`](super::DynCsr) structure maintains, so ranks are
+/// bitwise identical between the rebuild and incremental CSR modes.
 #[derive(Debug, Clone, Default)]
 pub struct GraphBuilder {
     adj: Vec<Vec<VertexId>>,
@@ -43,19 +50,22 @@ impl GraphBuilder {
     }
 
     pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
-        self.adj[u as usize].contains(&v)
+        self.adj[u as usize].binary_search(&v).is_ok()
     }
 
-    /// Insert (u, v); returns false if it already existed.
+    /// Insert (u, v) in sorted position; returns false if it already
+    /// existed. O(log deg) search + O(deg) shift.
     pub fn insert_edge(&mut self, u: VertexId, v: VertexId) -> bool {
         assert!((u as usize) < self.adj.len() && (v as usize) < self.adj.len());
         let row = &mut self.adj[u as usize];
-        if row.contains(&v) {
-            return false;
+        match row.binary_search(&v) {
+            Ok(_) => false,
+            Err(pos) => {
+                row.insert(pos, v);
+                self.num_edges += 1;
+                true
+            }
         }
-        row.push(v);
-        self.num_edges += 1;
-        true
     }
 
     /// Remove (u, v); returns false if it was absent. Self-loops are
@@ -65,12 +75,14 @@ impl GraphBuilder {
             return false;
         }
         let row = &mut self.adj[u as usize];
-        if let Some(pos) = row.iter().position(|&x| x == v) {
-            row.swap_remove(pos);
-            self.num_edges -= 1;
-            true
-        } else {
-            false
+        match row.binary_search(&v) {
+            Ok(pos) => {
+                // shift, not swap_remove: the sorted-row invariant holds
+                row.remove(pos);
+                self.num_edges -= 1;
+                true
+            }
+            Err(_) => false,
         }
     }
 
@@ -79,8 +91,8 @@ impl GraphBuilder {
     pub fn ensure_self_loops(&mut self) {
         for v in 0..self.adj.len() {
             let vid = v as VertexId;
-            if !self.adj[v].contains(&vid) {
-                self.adj[v].push(vid);
+            if let Err(pos) = self.adj[v].binary_search(&vid) {
+                self.adj[v].insert(pos, vid);
                 self.num_edges += 1;
             }
         }
@@ -131,6 +143,21 @@ mod tests {
         assert!(!b.remove_edge(2, 2)); // protected
         assert!(b.has_edge(2, 2));
         assert!(b.to_csr().has_no_dead_ends());
+    }
+
+    #[test]
+    fn rows_stay_sorted_under_churn() {
+        let mut b = GraphBuilder::new(8);
+        for v in [5u32, 1, 7, 3, 0, 6, 2, 4] {
+            b.insert_edge(0, v);
+        }
+        assert_eq!(b.out_neighbors(0), &[0, 1, 2, 3, 4, 5, 6, 7]);
+        b.remove_edge(0, 3);
+        b.ensure_self_loops();
+        assert_eq!(b.out_neighbors(0), &[0, 1, 2, 4, 5, 6, 7]);
+        for w in 1..8u32 {
+            assert!(b.out_neighbors(w).windows(2).all(|p| p[0] < p[1]));
+        }
     }
 
     #[test]

@@ -23,14 +23,57 @@ use crate::util::par;
 /// run the sequential counting sort.
 const PAR_BUILD_CUTOFF: usize = 1 << 15;
 
-/// Immutable CSR adjacency: `targets[offsets[v]..offsets[v+1]]` are the
-/// neighbors of `v` (out-neighbors by convention; a transposed instance
-/// holds in-neighbors).
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// CSR adjacency. Two layouts share this type:
+///
+/// * **packed** (`ends == None`, every constructor here): row `v` is
+///   `targets[offsets[v]..offsets[v + 1]]`, the arena is gapless and
+///   `offsets` is monotone — the layout every engine kernel was written
+///   against;
+/// * **slack** (`ends == Some`, built only by [`super::dyncsr::DynCsr`]):
+///   row `v` is `targets[offsets[v]..ends[v]]` with per-row headroom after
+///   `ends[v]`, so a batch insertion is an in-row shift instead of a full
+///   rebuild. `offsets` may be non-monotone after a row relocates to the
+///   arena tail, and the arena contains dead regions.
+///
+/// All row-level accessors ([`neighbors`](CsrGraph::neighbors),
+/// [`degree`](CsrGraph::degree), [`edges`](CsrGraph::edges), …) work on
+/// both layouts; the raw [`offsets`](CsrGraph::offsets) /
+/// [`targets`](CsrGraph::targets) slices are only meaningful as a packed
+/// row map when [`is_packed`](CsrGraph::is_packed) holds (absolute arena
+/// ranges stay valid in both layouts). Equality is *logical*: two graphs
+/// compare equal iff every row holds the same neighbor sequence, whatever
+/// the layout.
+#[derive(Debug, Clone)]
 pub struct CsrGraph {
-    offsets: Vec<u64>,
-    targets: Vec<VertexId>,
+    /// Row starts (`n + 1` entries when packed — the classic offset array —
+    /// `n` meaningful entries in slack mode).
+    pub(crate) offsets: Vec<u64>,
+    pub(crate) targets: Vec<VertexId>,
+    /// Per-row ends: `Some` selects the slack layout.
+    pub(crate) ends: Option<Vec<u64>>,
+    /// Logical edge count (= `targets.len()` when packed).
+    pub(crate) m: usize,
+    /// Out-degrees as f64, maintained by `DynCsr` so the asynchronous
+    /// engines' fused gather-divide skips the O(n) recompute per solve.
+    pub(crate) deg_f64_cache: Option<Vec<f64>>,
+    /// `(threshold, ascending vertex ids with degree > threshold)`,
+    /// maintained by `DynCsr` so `StepPlan::build` skips the O(n)
+    /// re-partition per run. Must equal `partition_by_degree(...).high()`.
+    pub(crate) hub_cache: Option<(u32, Vec<VertexId>)>,
 }
+
+impl PartialEq for CsrGraph {
+    /// Logical (per-row) equality, independent of layout and caches: a
+    /// slack graph equals its packed rebuild iff every row matches.
+    fn eq(&self, other: &Self) -> bool {
+        self.num_vertices() == other.num_vertices()
+            && self.m == other.m
+            && (0..self.num_vertices() as VertexId)
+                .all(|v| self.neighbors(v) == other.neighbors(v))
+    }
+}
+
+impl Eq for CsrGraph {}
 
 /// Fuse per-thread histograms (thread-major, `n` entries each) into row
 /// offsets and in-place write cursors: after this, `hists[t*n + v]` is the
@@ -52,6 +95,32 @@ fn cursors_from_histograms(n: usize, hists: &mut [u64], offsets: &mut [u64]) -> 
 }
 
 impl CsrGraph {
+    /// Assemble a packed-layout graph (gapless arena, monotone offsets).
+    pub(crate) fn packed(offsets: Vec<u64>, targets: Vec<VertexId>) -> Self {
+        let m = targets.len();
+        Self {
+            offsets,
+            targets,
+            ends: None,
+            m,
+            deg_f64_cache: None,
+            hub_cache: None,
+        }
+    }
+
+    /// Assemble a slack-layout graph (used by `DynCsr`; rows must be sorted
+    /// and `m` must equal the sum of row lengths).
+    pub(crate) fn slack(offsets: Vec<u64>, ends: Vec<u64>, targets: Vec<VertexId>, m: usize) -> Self {
+        Self {
+            offsets,
+            targets,
+            ends: Some(ends),
+            m,
+            deg_f64_cache: None,
+            hub_cache: None,
+        }
+    }
+
     /// Build from per-vertex adjacency lists.
     pub fn from_adjacency(adj: &[Vec<VertexId>]) -> Self {
         let n = adj.len();
@@ -66,7 +135,7 @@ impl CsrGraph {
         for nbrs in adj {
             targets.extend_from_slice(nbrs);
         }
-        Self { offsets, targets }
+        Self::packed(offsets, targets)
     }
 
     /// Build from an edge list (`n` fixes the vertex count; isolated vertices
@@ -114,7 +183,7 @@ impl CsrGraph {
                 *c += 1;
             }
         });
-        Self { offsets, targets }
+        Self::packed(offsets, targets)
     }
 
     /// [`CsrGraph::from_edges_threads`] with the full pool.
@@ -138,7 +207,7 @@ impl CsrGraph {
             targets[*c as usize] = v;
             *c += 1;
         }
-        Self { offsets, targets }
+        Self::packed(offsets, targets)
     }
 
     /// Number of vertices.
@@ -147,24 +216,58 @@ impl CsrGraph {
         self.offsets.len() - 1
     }
 
-    /// Number of (directed) edges, self-loops included.
+    /// Number of (directed) edges, self-loops included. In slack layouts
+    /// this is the *logical* count, not the arena length.
     #[inline]
     pub fn num_edges(&self) -> usize {
-        self.targets.len()
+        self.m
+    }
+
+    /// `true` for the gapless, monotone-offset layout the raw
+    /// [`offsets`](CsrGraph::offsets) array describes completely.
+    #[inline]
+    pub fn is_packed(&self) -> bool {
+        self.ends.is_none()
+    }
+
+    /// First arena slot of row `v`.
+    #[inline]
+    pub(crate) fn row_start(&self, v: usize) -> usize {
+        self.offsets[v] as usize
+    }
+
+    /// One past the last arena slot of row `v`.
+    #[inline]
+    pub(crate) fn row_end(&self, v: usize) -> usize {
+        match &self.ends {
+            Some(e) => e[v] as usize,
+            None => self.offsets[v + 1] as usize,
+        }
+    }
+
+    /// Per-row `(starts, ends)` slices for the SIMD contribution kernel:
+    /// `degree(v) = ends[v] - starts[v]`. For packed layouts these are two
+    /// windows of the same offset array — exactly the loads the kernel
+    /// always did — so the result is bitwise identical across layouts.
+    #[inline]
+    pub(crate) fn row_bounds(&self) -> (&[u64], &[u64]) {
+        let n = self.num_vertices();
+        match &self.ends {
+            Some(e) => (&self.offsets[..n], e),
+            None => (&self.offsets[..n], &self.offsets[1..]),
+        }
     }
 
     /// Neighbors of `v`.
     #[inline]
     pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
-        let s = self.offsets[v as usize] as usize;
-        let e = self.offsets[v as usize + 1] as usize;
-        &self.targets[s..e]
+        &self.targets[self.row_start(v as usize)..self.row_end(v as usize)]
     }
 
     /// Degree of `v` in this direction.
     #[inline]
     pub fn degree(&self, v: VertexId) -> u32 {
-        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as u32
+        (self.row_end(v as usize) - self.row_start(v as usize)) as u32
     }
 
     /// All degrees.
@@ -176,17 +279,41 @@ impl CsrGraph {
 
     /// All degrees as f64 (exact — degrees fit far below 2^52), for the
     /// asynchronous engines' fused gather-divide pull (`util::simd`).
+    /// `DynCsr` maintains the cached copy incrementally; packed snapshots
+    /// compute it on demand (same integers either way).
     pub fn degrees_f64(&self) -> Vec<f64> {
-        self.offsets
-            .windows(2)
-            .map(|w| (w[1] - w[0]) as f64)
+        if let Some(c) = &self.deg_f64_cache {
+            return c.clone();
+        }
+        (0..self.num_vertices())
+            .map(|v| (self.row_end(v) - self.row_start(v)) as f64)
             .collect()
+    }
+
+    /// The incrementally-maintained hub list for `threshold`, if this graph
+    /// carries one (slack graphs built by `DynCsr`). Identical by contract
+    /// to `partition_by_degree(&self.degrees(), threshold).high()`.
+    pub(crate) fn cached_hubs(&self, threshold: u32) -> Option<&[VertexId]> {
+        match &self.hub_cache {
+            Some((t, hubs)) if *t == threshold => Some(hubs),
+            _ => None,
+        }
     }
 
     /// Transposed graph (in-neighbors become out-neighbors), built with the
     /// same parallel counting-sort as [`CsrGraph::from_edges_threads`];
     /// identical output at every thread count.
     pub fn transpose_threads(&self, threads: usize) -> CsrGraph {
+        if !self.is_packed() {
+            // Slack arenas have dead regions the counting passes below would
+            // misread; rebuild from the logical edge list instead. Row
+            // iteration is ascending-source, so the counting sort places
+            // each transpose row in ascending order — matching the sorted
+            // rows `DynCsr` maintains directly.
+            let rev: Vec<(VertexId, VertexId)> =
+                self.edges().map(|(u, v)| (v, u)).collect();
+            return CsrGraph::from_edges_threads(self.num_vertices(), &rev, threads);
+        }
         let threads = par::resolve(threads);
         let m = self.targets.len();
         if threads == 1 || m < PAR_BUILD_CUTOFF {
@@ -233,7 +360,7 @@ impl CsrGraph {
                 row += 1;
             }
         });
-        CsrGraph { offsets: toffsets, targets: ttargets }
+        CsrGraph::packed(toffsets, ttargets)
     }
 
     /// [`CsrGraph::transpose_threads`] with the full pool.
@@ -260,7 +387,7 @@ impl CsrGraph {
                 *c += 1;
             }
         }
-        CsrGraph { offsets, targets }
+        CsrGraph::packed(offsets, targets)
     }
 
     /// Iterate all edges `(u, v)`.
@@ -278,13 +405,17 @@ impl CsrGraph {
         (0..self.num_vertices() as VertexId).all(|v| self.degree(v) > 0)
     }
 
-    /// Raw offsets (for packing into device formats).
+    /// Raw offsets (for packing into device formats). Only a complete row
+    /// map when [`is_packed`](CsrGraph::is_packed); slack layouts need
+    /// `row_start`/`row_end`.
     #[inline]
     pub fn offsets(&self) -> &[u64] {
         &self.offsets
     }
 
-    /// Raw targets.
+    /// Raw target arena. Absolute ranges from `row_start`/`row_end` (or a
+    /// `StepPlan`'s hub items) are valid in both layouts; slack arenas also
+    /// contain dead regions between rows.
     #[inline]
     pub fn targets(&self) -> &[VertexId] {
         &self.targets

@@ -1,0 +1,508 @@
+//! Delta-aware dynamic CSR: O(batch) maintenance of G *and* Gᵀ.
+//!
+//! The coordinator used to pay O(N + E) per update — a full counting-sort
+//! rebuild of G, a full rebuild of Gᵀ, and a cloned `old_csr` — so
+//! small-batch updates were dominated by graph maintenance, not by the
+//! rank computation the paper accelerates. [`DynCsr`] keeps both
+//! directions in the slack CSR layout (Hornet-style blocked adjacency:
+//! each row owns a capacity-padded arena segment) and applies a batch of
+//! `I` insertions + `D` deletions in amortized `O((I + D) · log deg)`:
+//!
+//! * **insert** — binary search in the sorted row, shift the tail right
+//!   one slot; a full row relocates to the arena tail with doubled
+//!   capacity (amortized O(1) relocations per slot, as in a growable
+//!   vector);
+//! * **delete** — binary search, shift the tail left (capacity is kept, so
+//!   a later re-insert is free);
+//! * **compaction** — when the arena grows past
+//!   [`slack_limit`] (relocations leave dead regions behind; deletions
+//!   strand capacity), the side is repacked row-by-row with fresh headroom.
+//!   The trigger depends only on the logical graph and the edit history,
+//!   never on timing, so layouts are reproducible.
+//!
+//! Alongside the adjacency itself, the structure incrementally maintains
+//! what the engines would otherwise recompute per run: the out-degree f64
+//! cache (`CsrGraph::degrees_f64`, the asynchronous engines' fused
+//! gather-divide divisor) on both sides, and the in-degree hub list
+//! (`partition_by_degree(..).high()` at [`HUB_DEGREE_THRESHOLD`]) on Gᵀ,
+//! patched on threshold crossings.
+//!
+//! # Determinism contract (neighbor order)
+//!
+//! Ranks must be **bitwise identical** between the incremental and rebuild
+//! paths. The engines' floating-point results depend on neighbor *order*
+//! (gathers stripe a row's in-neighbors across SIMD lanes in row order) —
+//! so both paths pin the same order contract: **every row is sorted
+//! ascending**. `GraphBuilder` keeps its rows sorted (binary-search
+//! insert), so a counting-sort rebuild emits sorted rows; `DynCsr` inserts
+//! in sorted position directly. Row *placement* in the arena (slack,
+//! relocations, compaction) is invisible to the kernels: hub chunk
+//! boundaries are relative to the row start, per-vertex gathers see only
+//! the row slice, and the contribution kernel reads `(starts, ends)` pairs
+//! whose differences are the same degree integers in both layouts.
+//! `tests/incremental_csr.rs` holds the equivalence matrix.
+//!
+//! # Escape hatch
+//!
+//! [`CsrMode`] on `PagerankConfig` (mirroring `pool_persistent` /
+//! `PAGERANK_SIMD`): `Auto` (default) resolves to the incremental path
+//! unless the `PAGERANK_CSR=rebuild` environment pin selects the legacy
+//! full-rebuild path; `Rebuild` / `Incremental` override the environment.
+//! `ci.sh` runs the digest gate under both settings and diffs the bits.
+
+use super::{CsrGraph, GraphBuilder, VertexId};
+use crate::batch::BatchUpdate;
+
+/// Degree above which a vertex takes the hub (edge-chunked) path in the
+/// native pull kernels; the maintained hub cache uses the same threshold.
+pub(crate) const HUB_DEGREE_THRESHOLD: u32 = 1024;
+
+/// How the coordinator maintains its CSR snapshots across batch updates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CsrMode {
+    /// Honor the `PAGERANK_CSR` environment pin if set (`rebuild` forces
+    /// the legacy full-rebuild path, anything else the incremental
+    /// structure); otherwise maintain incrementally. The default.
+    #[default]
+    Auto,
+    /// Force the legacy path: full counting-sort rebuild of G plus full
+    /// transpose per update — the escape hatch, and the reference side of
+    /// the incremental-vs-rebuild differential tests.
+    Rebuild,
+    /// Force the incremental [`DynCsr`] structure.
+    Incremental,
+}
+
+impl CsrMode {
+    /// Serialization name (checkpoints, reports).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CsrMode::Auto => "auto",
+            CsrMode::Rebuild => "rebuild",
+            CsrMode::Incremental => "incremental",
+        }
+    }
+
+    /// Parse a serialization name.
+    pub fn parse(s: &str) -> Option<CsrMode> {
+        match s {
+            "auto" => Some(CsrMode::Auto),
+            "rebuild" => Some(CsrMode::Rebuild),
+            "incremental" => Some(CsrMode::Incremental),
+            _ => None,
+        }
+    }
+
+    /// Resolve to "maintain incrementally?": explicit settings win, `Auto`
+    /// consults the `PAGERANK_CSR` environment pin (used by ci.sh to run
+    /// the whole suite on each side of the differential).
+    pub fn resolve_incremental(self) -> bool {
+        match self {
+            CsrMode::Rebuild => false,
+            CsrMode::Incremental => true,
+            CsrMode::Auto => !matches!(
+                std::env::var("PAGERANK_CSR"),
+                Ok(s) if s.trim() == "rebuild"
+            ),
+        }
+    }
+}
+
+/// Initial / post-compaction headroom for a row of `len` edges: 12.5%
+/// plus a couple of slots, so small rows absorb a few insertions before
+/// relocating and the arena stays within ~1.2× the packed size.
+fn target_cap(len: usize) -> u64 {
+    (len + len / 8 + 2) as u64
+}
+
+/// Compaction trigger: repack a side when its arena exceeds this. The
+/// fresh layout uses ≈ 1.125·m + 2n slots, so the bound allows roughly
+/// another 0.9·m + 2n slots of relocation/deletion waste between repacks.
+fn slack_limit(n: usize, m: usize) -> usize {
+    2 * m + 4 * n + 64
+}
+
+/// One slack-CSR side plus its per-row capacities.
+#[derive(Debug, Clone)]
+struct Side {
+    csr: CsrGraph,
+    caps: Vec<u64>,
+}
+
+impl Side {
+    /// Lay out sorted rows with [`target_cap`] headroom each.
+    fn from_rows(rows: &[&[VertexId]]) -> Side {
+        let n = rows.len();
+        let mut offsets = vec![0u64; n + 1];
+        let mut ends = vec![0u64; n];
+        let mut caps = vec![0u64; n];
+        let mut arena = 0u64;
+        let mut m = 0usize;
+        for (v, row) in rows.iter().enumerate() {
+            offsets[v] = arena;
+            ends[v] = arena + row.len() as u64;
+            caps[v] = target_cap(row.len());
+            arena += caps[v];
+            m += row.len();
+        }
+        offsets[n] = arena;
+        let mut targets = vec![0 as VertexId; arena as usize];
+        for (v, row) in rows.iter().enumerate() {
+            let s = offsets[v] as usize;
+            targets[s..s + row.len()].copy_from_slice(row);
+        }
+        Side { csr: CsrGraph::slack(offsets, ends, targets, m), caps }
+    }
+
+    #[inline]
+    fn row_len(&self, v: usize) -> usize {
+        self.csr.row_end(v) - self.csr.row_start(v)
+    }
+
+    /// Insert `x` into sorted row `v`; returns false if already present.
+    fn insert(&mut self, v: usize, x: VertexId) -> bool {
+        let s = self.csr.row_start(v);
+        let e = self.csr.row_end(v);
+        let pos = match self.csr.targets[s..e].binary_search(&x) {
+            Ok(_) => return false,
+            Err(p) => p,
+        };
+        let len = e - s;
+        let (s, e) = if len as u64 == self.caps[v] {
+            // Full row: relocate to the arena tail with doubled capacity
+            // (the old segment becomes dead space until compaction).
+            let new_cap = (self.caps[v] * 2).max(target_cap(len + 1)).max(4);
+            let ns = self.csr.targets.len();
+            self.csr.targets.extend_from_within(s..e);
+            self.csr.targets.resize(ns + new_cap as usize, 0);
+            self.csr.offsets[v] = ns as u64;
+            self.caps[v] = new_cap;
+            (ns, ns + len)
+        } else {
+            (s, e)
+        };
+        self.csr.targets.copy_within(s + pos..e, s + pos + 1);
+        self.csr.targets[s + pos] = x;
+        self.csr.ends.as_mut().expect("slack layout")[v] = (e + 1) as u64;
+        self.csr.m += 1;
+        true
+    }
+
+    /// Remove `x` from sorted row `v`; returns false if absent. Capacity
+    /// is kept, so delete-then-reinsert churn never relocates.
+    fn remove(&mut self, v: usize, x: VertexId) -> bool {
+        let s = self.csr.row_start(v);
+        let e = self.csr.row_end(v);
+        let pos = match self.csr.targets[s..e].binary_search(&x) {
+            Ok(p) => p,
+            Err(_) => return false,
+        };
+        self.csr.targets.copy_within(s + pos + 1..e, s + pos);
+        self.csr.ends.as_mut().expect("slack layout")[v] = (e - 1) as u64;
+        self.csr.m -= 1;
+        true
+    }
+
+    /// Repack the arena row-by-row with fresh [`target_cap`] headroom.
+    /// Rows, caches and the logical graph are untouched — only placement
+    /// changes, which the kernels never observe.
+    fn compact(&mut self) {
+        let n = self.csr.num_vertices();
+        let mut offsets = vec![0u64; n + 1];
+        let mut ends = vec![0u64; n];
+        let mut arena = 0u64;
+        for v in 0..n {
+            offsets[v] = arena;
+            let len = self.row_len(v);
+            ends[v] = arena + len as u64;
+            self.caps[v] = target_cap(len);
+            arena += self.caps[v];
+        }
+        offsets[n] = arena;
+        let mut targets = vec![0 as VertexId; arena as usize];
+        for v in 0..n {
+            let s = self.csr.row_start(v);
+            let e = self.csr.row_end(v);
+            targets[offsets[v] as usize..ends[v] as usize]
+                .copy_from_slice(&self.csr.targets[s..e]);
+        }
+        self.csr.offsets = offsets;
+        self.csr.ends = Some(ends);
+        self.csr.targets = targets;
+    }
+}
+
+/// Incrementally-maintained G and Gᵀ (see the module docs). Created from
+/// the coordinator's `GraphBuilder` and kept in lockstep with it by
+/// [`DynCsr::apply_batch`] — both sides always expose exactly the logical
+/// graph a `to_csr()` + `transpose()` rebuild would produce.
+#[derive(Debug, Clone)]
+pub struct DynCsr {
+    g: Side,
+    gt: Side,
+    compactions: u64,
+}
+
+impl DynCsr {
+    /// Build both sides from the builder's (sorted) rows, seeding the
+    /// degree and hub caches.
+    pub fn from_builder(b: &GraphBuilder) -> DynCsr {
+        let n = b.num_vertices();
+        let rows: Vec<&[VertexId]> =
+            (0..n).map(|u| b.out_neighbors(u as VertexId)).collect();
+        let g = Side::from_rows(&rows);
+        // Transpose rows: ascending-source iteration keeps them sorted.
+        let mut tadj: Vec<Vec<VertexId>> = vec![Vec::new(); n];
+        for (u, v) in b.edges() {
+            tadj[v as usize].push(u);
+        }
+        let trows: Vec<&[VertexId]> = tadj.iter().map(|r| r.as_slice()).collect();
+        let gt = Side::from_rows(&trows);
+        let mut dc = DynCsr { g, gt, compactions: 0 };
+        dc.g.csr.deg_f64_cache =
+            Some((0..n).map(|v| dc.g.row_len(v) as f64).collect());
+        dc.gt.csr.deg_f64_cache =
+            Some((0..n).map(|v| dc.gt.row_len(v) as f64).collect());
+        let hubs: Vec<VertexId> = (0..n as VertexId)
+            .filter(|&v| dc.gt.row_len(v as usize) as u32 > HUB_DEGREE_THRESHOLD)
+            .collect();
+        dc.gt.csr.hub_cache = Some((HUB_DEGREE_THRESHOLD, hubs));
+        dc
+    }
+
+    /// The maintained `(G, Gᵀ)` views, ready for the engines.
+    pub fn graphs(&self) -> (&CsrGraph, &CsrGraph) {
+        (&self.g.csr, &self.gt.csr)
+    }
+
+    /// Logical edge count (either side; they are always equal).
+    pub fn num_edges(&self) -> usize {
+        self.g.csr.num_edges()
+    }
+
+    /// Total side-compactions so far (observability / tests).
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    /// Apply a *validated* batch — the same clean subset `batch::apply`
+    /// feeds the builder, in the same order (deletions, then insertions;
+    /// the self-loop re-add is a no-op because validation rejects
+    /// self-loop edits and every vertex keeps its protected loop from
+    /// construction). Returns the number of edges changed, equal to the
+    /// builder's count by the lockstep invariant.
+    pub fn apply_batch(&mut self, batch: &BatchUpdate) -> usize {
+        let mut changed = 0usize;
+        for &(u, v) in &batch.deletions {
+            if u == v {
+                continue; // protected self-loops, mirroring GraphBuilder
+            }
+            if self.g.remove(u as usize, v) {
+                let removed = self.gt.remove(v as usize, u);
+                debug_assert!(removed, "G/Gᵀ desynchronized on ({u}, {v})");
+                self.after_edit(u, v);
+                changed += 1;
+            }
+        }
+        for &(u, v) in &batch.insertions {
+            if u == v {
+                continue; // validation rejects these; stay in lockstep
+            }
+            if self.g.insert(u as usize, v) {
+                let inserted = self.gt.insert(v as usize, u);
+                debug_assert!(inserted, "G/Gᵀ desynchronized on ({u}, {v})");
+                self.after_edit(u, v);
+                changed += 1;
+            }
+        }
+        self.maybe_compact();
+        changed
+    }
+
+    /// Patch the degree caches and the Gᵀ hub list after one applied edit
+    /// on edge (u, v). Each edit moves the touched degrees by exactly one,
+    /// so threshold crossings are local insert/remove operations on the
+    /// ascending hub list.
+    fn after_edit(&mut self, u: VertexId, v: VertexId) {
+        let gdeg = self.g.row_len(u as usize) as f64;
+        if let Some(c) = self.g.csr.deg_f64_cache.as_mut() {
+            c[u as usize] = gdeg;
+        }
+        let tdeg = self.gt.row_len(v as usize);
+        if let Some(c) = self.gt.csr.deg_f64_cache.as_mut() {
+            c[v as usize] = tdeg as f64;
+        }
+        if let Some((t, hubs)) = self.gt.csr.hub_cache.as_mut() {
+            let t = *t as usize;
+            if tdeg == t + 1 {
+                // crossed up: in-degree was t (low), now t + 1 (hub)
+                if let Err(pos) = hubs.binary_search(&v) {
+                    hubs.insert(pos, v);
+                }
+            } else if tdeg == t {
+                // crossed down: was t + 1 (hub), now t (low)
+                if let Ok(pos) = hubs.binary_search(&v) {
+                    hubs.remove(pos);
+                }
+            }
+        }
+    }
+
+    /// Repack any side whose arena outgrew [`slack_limit`]. Deterministic:
+    /// the trigger is a function of the edit history only.
+    fn maybe_compact(&mut self) {
+        let n = self.g.csr.num_vertices();
+        let m = self.g.csr.num_edges();
+        if self.g.csr.targets.len() > slack_limit(n, m) {
+            self.g.compact();
+            self.compactions += 1;
+        }
+        if self.gt.csr.targets.len() > slack_limit(n, m) {
+            self.gt.compact();
+            self.compactions += 1;
+        }
+    }
+
+    /// Packed logical copies of both sides (tests, checkpoint tooling):
+    /// the exact graphs a full rebuild would produce.
+    pub fn to_packed(&self) -> (CsrGraph, CsrGraph) {
+        let pack = |side: &Side| {
+            let n = side.csr.num_vertices();
+            let rows: Vec<&[VertexId]> =
+                (0..n).map(|v| side.csr.neighbors(v as VertexId)).collect();
+            let mut offsets = Vec::with_capacity(n + 1);
+            let mut total = 0u64;
+            offsets.push(0);
+            let mut targets = Vec::with_capacity(side.csr.num_edges());
+            for row in &rows {
+                total += row.len() as u64;
+                offsets.push(total);
+                targets.extend_from_slice(row);
+            }
+            CsrGraph::packed(offsets, targets)
+        };
+        (pack(&self.g), pack(&self.gt))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::{self, random_batch};
+    use crate::generators::er;
+
+    fn assert_lockstep(dc: &DynCsr, b: &GraphBuilder) {
+        let (g, gt) = dc.graphs();
+        let want_g = b.to_csr();
+        let want_gt = want_g.transpose();
+        assert_eq!(g, &want_g, "forward side diverged");
+        assert_eq!(gt, &want_gt, "transpose side diverged");
+        assert_eq!(dc.num_edges(), b.num_edges());
+        // caches match a cold recompute bit-for-bit
+        assert_eq!(g.degrees_f64(), want_g.degrees_f64());
+        assert_eq!(gt.degrees_f64(), want_gt.degrees_f64());
+        let hubs = gt.cached_hubs(HUB_DEGREE_THRESHOLD).expect("hub cache");
+        let want_hubs = crate::graph::partition_by_degree(
+            &want_gt.degrees(),
+            HUB_DEGREE_THRESHOLD,
+        );
+        assert_eq!(hubs, want_hubs.high(), "hub cache diverged");
+    }
+
+    #[test]
+    fn tracks_builder_through_random_batches() {
+        let mut b = er::generate(400, 5.0, 17);
+        b.ensure_self_loops();
+        let mut dc = DynCsr::from_builder(&b);
+        assert_lockstep(&dc, &b);
+        for seed in 0..12 {
+            let upd = random_batch(&b, 40, 0.7, seed);
+            let validated = batch::validate(&b, &upd);
+            let applied = batch::apply(&mut b, &validated.clean);
+            let got = dc.apply_batch(&validated.clean);
+            assert_eq!(got, applied, "changed-edge count, seed {seed}");
+            assert_lockstep(&dc, &b);
+        }
+    }
+
+    #[test]
+    fn row_overflow_relocates() {
+        // start from bare self-loops (row capacity 3), then grow vertex 0's
+        // out-row through several doublings — every insert after the third
+        // lands in a relocated segment
+        let mut b = GraphBuilder::new(64);
+        b.ensure_self_loops();
+        let mut dc = DynCsr::from_builder(&b);
+        for v in 1..64u32 {
+            let upd = BatchUpdate { deletions: vec![], insertions: vec![(0, v)] };
+            batch::apply(&mut b, &upd);
+            dc.apply_batch(&upd);
+        }
+        assert_lockstep(&dc, &b);
+        assert_eq!(dc.graphs().0.degree(0), 64);
+        assert_eq!(dc.compactions(), 0, "growth alone stays under the limit");
+    }
+
+    #[test]
+    fn graph_emptying_batch_triggers_compaction() {
+        // a dense seed graph whose arena (≈ 1.125·m + 2n) far exceeds the
+        // post-deletion slack limit (2·m' + 4n + 64 with m' = n self-loops)
+        let mut b = er::generate(500, 20.0, 3);
+        b.ensure_self_loops();
+        let mut dc = DynCsr::from_builder(&b);
+        assert!(b.num_edges() > 8_000, "seed graph unexpectedly sparse");
+        let wipe = BatchUpdate { deletions: b.real_edges(), insertions: vec![] };
+        let validated = batch::validate(&b, &wipe);
+        let applied = batch::apply(&mut b, &validated.clean);
+        let got = dc.apply_batch(&validated.clean);
+        assert_eq!(got, applied);
+        assert_eq!(b.num_edges(), 500, "only protected self-loops remain");
+        assert!(dc.compactions() > 0, "emptying batch must trip compaction");
+        assert_lockstep(&dc, &b);
+        // the structure keeps working after the repack
+        let refill = random_batch(&b, 200, 1.0, 8);
+        let validated = batch::validate(&b, &refill);
+        batch::apply(&mut b, &validated.clean);
+        dc.apply_batch(&validated.clean);
+        assert_lockstep(&dc, &b);
+    }
+
+    #[test]
+    fn hub_threshold_crossings_patch_the_cache() {
+        let n = (HUB_DEGREE_THRESHOLD + 10) as usize;
+        let mut b = GraphBuilder::new(n);
+        b.ensure_self_loops();
+        let mut dc = DynCsr::from_builder(&b);
+        // push vertex 3's in-degree across the hub threshold and back
+        let ins: Vec<(VertexId, VertexId)> = (0..n as VertexId)
+            .filter(|&u| u != 3)
+            .map(|u| (u, 3))
+            .collect();
+        let up = BatchUpdate { deletions: vec![], insertions: ins.clone() };
+        batch::apply(&mut b, &up);
+        dc.apply_batch(&up);
+        assert_lockstep(&dc, &b);
+        assert_eq!(
+            dc.graphs().1.cached_hubs(HUB_DEGREE_THRESHOLD),
+            Some(&[3u32][..])
+        );
+        let down = BatchUpdate { deletions: ins, insertions: vec![] };
+        batch::apply(&mut b, &down);
+        dc.apply_batch(&down);
+        assert_lockstep(&dc, &b);
+        let hubs = dc.graphs().1.cached_hubs(HUB_DEGREE_THRESHOLD).unwrap();
+        assert!(hubs.is_empty(), "vertex 3 must leave the hub cache");
+    }
+
+    #[test]
+    fn csr_mode_parse_roundtrip_and_resolution() {
+        for m in [CsrMode::Auto, CsrMode::Rebuild, CsrMode::Incremental] {
+            assert_eq!(CsrMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(CsrMode::parse("hornet"), None);
+        assert_eq!(CsrMode::default(), CsrMode::Auto);
+        // explicit modes ignore the environment
+        assert!(!CsrMode::Rebuild.resolve_incremental());
+        assert!(CsrMode::Incremental.resolve_incremental());
+    }
+}

@@ -3,10 +3,12 @@
 
 pub mod builder;
 pub mod csr;
+pub mod dyncsr;
 pub mod partition;
 
 pub use builder::GraphBuilder;
 pub use csr::CsrGraph;
+pub use dyncsr::{CsrMode, DynCsr};
 pub use partition::{partition_by_degree, Partition};
 
 /// Vertex ids are 32-bit, as in the paper (Section 5.1.2).

@@ -155,8 +155,15 @@ fn hmax(l: [f64; 4]) -> f64 {
 /// rank mass folded into the dangling accumulator lane. Live vertices add
 /// `+0.0` to the lane, matching the vector backends' masked add.
 #[inline(always)]
-fn contrib_lane(offsets: &[u64], r: &[f64], u: usize, slot: &mut f64, lane: &mut f64) {
-    let d = offsets[u + 1] - offsets[u];
+fn contrib_lane(
+    starts: &[u64],
+    ends: &[u64],
+    r: &[f64],
+    u: usize,
+    slot: &mut f64,
+    lane: &mut f64,
+) {
+    let d = ends[u] - starts[u];
     if d == 0 {
         *slot = 0.0;
         *lane += r[u];
@@ -195,10 +202,16 @@ fn gather_div_sum_portable(num: &[f64], den: &[f64], idx: &[u32]) -> f64 {
     hsum(l)
 }
 
-fn contrib_block_portable(offsets: &[u64], r: &[f64], start: usize, out: &mut [f64]) -> f64 {
+fn contrib_block_portable(
+    starts: &[u64],
+    ends: &[u64],
+    r: &[f64],
+    start: usize,
+    out: &mut [f64],
+) -> f64 {
     let mut l = [0.0f64; 4];
     for (i, slot) in out.iter_mut().enumerate() {
-        contrib_lane(offsets, r, start + i, slot, &mut l[i % 4]);
+        contrib_lane(starts, ends, r, start + i, slot, &mut l[i % 4]);
     }
     hsum(l)
 }
@@ -287,11 +300,14 @@ mod avx2 {
     }
 
     /// # Safety
-    /// Caller guarantees AVX2, `offsets[start + i + 1]` in bounds for every
-    /// `i < out.len()`, and `r[start + i]` in bounds likewise.
+    /// Caller guarantees AVX2, `starts[start + i]` / `ends[start + i]` in
+    /// bounds for every `i < out.len()`, and `r[start + i]` in bounds
+    /// likewise. For a packed CSR, pass `(&offsets[..n], &offsets[1..])` —
+    /// the loads below are then byte-for-byte the old offset-pair loads.
     #[target_feature(enable = "avx2")]
     pub unsafe fn contrib_block(
-        offsets: &[u64],
+        starts: &[u64],
+        ends: &[u64],
         r: &[f64],
         start: usize,
         out: &mut [f64],
@@ -306,9 +322,8 @@ mod avx2 {
         let mut i = 0;
         while i < full {
             let u = start + i;
-            let lo = unsafe { _mm256_loadu_si256(offsets.as_ptr().add(u) as *const __m256i) };
-            let hi =
-                unsafe { _mm256_loadu_si256(offsets.as_ptr().add(u + 1) as *const __m256i) };
+            let lo = unsafe { _mm256_loadu_si256(starts.as_ptr().add(u) as *const __m256i) };
+            let hi = unsafe { _mm256_loadu_si256(ends.as_ptr().add(u) as *const __m256i) };
             let deg = _mm256_sub_epi64(hi, lo);
             // all-ones lanes where deg == 0 (dead end)
             let dead = _mm256_castsi256_pd(_mm256_cmpeq_epi64(deg, zero));
@@ -328,7 +343,7 @@ mod avx2 {
         let mut l = [0.0f64; 4];
         unsafe { _mm256_storeu_pd(l.as_mut_ptr(), acc) };
         for (j, slot) in out[full..].iter_mut().enumerate() {
-            contrib_lane(offsets, r, start + full + j, slot, &mut l[j]);
+            contrib_lane(starts, ends, r, start + full + j, slot, &mut l[j]);
         }
         hsum(l)
     }
@@ -434,18 +449,28 @@ pub fn gather_div_sum(be: Backend, num: &[f64], den: &[f64], idx: &[u32]) -> f64
 
 /// Contribution pass over one vertex block: `out[i] = r[start+i]/deg` with
 /// dead ends writing `0.0`, returning the block's dangling rank mass as a
-/// striped lane-tree sum. `offsets` is the out-CSR offset array (length
-/// `n + 1`); `r` the full rank vector; `out` the block
+/// striped lane-tree sum. `starts`/`ends` are the per-vertex out-row bounds
+/// (`CsrGraph::row_bounds`, both length `n`; a packed CSR passes
+/// `(&offsets[..n], &offsets[1..])` so the vector loads are unchanged);
+/// `r` the full rank vector; `out` the block
 /// `contrib[start..start + out.len()]`.
-pub fn contrib_block(be: Backend, offsets: &[u64], r: &[f64], start: usize, out: &mut [f64]) -> f64 {
-    debug_assert!(start + out.len() < offsets.len());
+pub fn contrib_block(
+    be: Backend,
+    starts: &[u64],
+    ends: &[u64],
+    r: &[f64],
+    start: usize,
+    out: &mut [f64],
+) -> f64 {
+    debug_assert_eq!(starts.len(), ends.len());
+    debug_assert!(start + out.len() <= starts.len());
     debug_assert!(start + out.len() <= r.len());
     match be {
-        Backend::Portable => contrib_block_portable(offsets, r, start, out),
+        Backend::Portable => contrib_block_portable(starts, ends, r, start, out),
         #[cfg(target_arch = "x86_64")]
         // SAFETY: AVX2 detected; the debug-asserted bounds are the CSR
         // block invariant the parallel substrate already guarantees.
-        Backend::Avx2 => unsafe { avx2::contrib_block(offsets, r, start, out) },
+        Backend::Avx2 => unsafe { avx2::contrib_block(starts, ends, r, start, out) },
     }
 }
 
@@ -575,13 +600,14 @@ mod tests {
             offsets.push(acc);
         }
         let r = random_values(&mut rng, n);
+        let (starts, ends) = (&offsets[..n], &offsets[1..]);
         for (start, len) in [(0usize, 4usize), (0, 530), (3, 7), (128, 257), (520, 10)] {
             let mut base_out = vec![0.0f64; len];
             let base =
-                contrib_block(Backend::Portable, &offsets, &r, start, &mut base_out);
+                contrib_block(Backend::Portable, starts, ends, &r, start, &mut base_out);
             for be in backends() {
                 let mut out = vec![99.0f64; len];
-                let dangling = contrib_block(be, &offsets, &r, start, &mut out);
+                let dangling = contrib_block(be, starts, ends, &r, start, &mut out);
                 assert_eq!(dangling.to_bits(), base.to_bits(), "dangling {start}+{len}");
                 for (i, (x, y)) in out.iter().zip(&base_out).enumerate() {
                     assert_eq!(x.to_bits(), y.to_bits(), "contrib[{}]", start + i);
@@ -597,7 +623,7 @@ mod tests {
         let r = [0.5, 0.25, 0.25];
         for be in backends() {
             let mut out = [9.0f64; 3];
-            let dangling = contrib_block(be, &offsets, &r, 0, &mut out);
+            let dangling = contrib_block(be, &offsets[..3], &offsets[1..], &r, 0, &mut out);
             assert_eq!(out[0].to_bits(), (0.5 / 2.0).to_bits());
             assert_eq!(out[1].to_bits(), 0.0f64.to_bits(), "dead end writes +0.0");
             assert_eq!(out[2].to_bits(), (0.25 / 3.0).to_bits());

@@ -1,0 +1,209 @@
+//! Equivalence harness for incremental CSR maintenance (`graph::dyncsr`).
+//!
+//! Two contracts under test. Structurally: a [`DynCsr`] driven through
+//! arbitrary clean batches stays *logically* identical to the legacy
+//! rebuild path (`builder.to_csr()` + `transpose()`) — same rows, same
+//! degrees (bitwise, through the f64 degree cache), same degree
+//! partitions — across row relocations, arena compactions and
+//! graph-emptying batches. Behaviorally: a coordinator in incremental CSR
+//! mode serves ranks bitwise equal to one in rebuild mode, for every
+//! approach of the paper, at every thread count and SIMD backend — the
+//! slack layout (per-row headroom, non-monotone offsets) must be invisible
+//! to every kernel. `ci.sh` additionally pins this cross-process: the
+//! golden rank digests of `tests/pool_determinism.rs` are written under
+//! both `PAGERANK_CSR` pins and diffed.
+
+use pagerank_dynamic::batch::{self, BatchUpdate};
+use pagerank_dynamic::coordinator::DynamicGraphService;
+use pagerank_dynamic::engines::Approach;
+use pagerank_dynamic::generators::{er, rmat};
+use pagerank_dynamic::graph::{partition_by_degree, CsrMode, DynCsr, GraphBuilder};
+use pagerank_dynamic::util::SimdPolicy;
+use pagerank_dynamic::PagerankConfig;
+
+/// Assert the incremental structure is logically identical to a from-scratch
+/// rebuild of the same builder: rows, transpose, degree caches, partitions.
+fn assert_tracks(dc: &DynCsr, b: &GraphBuilder, tag: &str) {
+    let want_g = b.to_csr();
+    let want_gt = want_g.transpose();
+    let (g, gt) = dc.graphs();
+    assert_eq!(g, &want_g, "{tag}: forward CSR diverged");
+    assert_eq!(gt, &want_gt, "{tag}: transpose CSR diverged");
+    assert_eq!(dc.num_edges(), b.num_edges(), "{tag}: edge count");
+    for (side, got, want) in [("g", g, &want_g), ("gt", gt, &want_gt)] {
+        let (a, c) = (got.degrees_f64(), want.degrees_f64());
+        assert_eq!(a.len(), c.len(), "{tag}/{side}: degree length");
+        for (i, (x, y)) in a.iter().zip(&c).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}/{side}: deg_f64[{i}]");
+        }
+        // partitions (the paper's Algorithm 4) see identical degree vectors
+        for threshold in [4u32, 1024] {
+            let pa = partition_by_degree(&got.degrees(), threshold);
+            let pb = partition_by_degree(&want.degrees(), threshold);
+            assert_eq!(pa.low(), pb.low(), "{tag}/{side}: low partition");
+            assert_eq!(pa.high(), pb.high(), "{tag}/{side}: high partition");
+        }
+    }
+    // the packed snapshot is exactly the rebuild
+    let (pg, pgt) = dc.to_packed();
+    assert!(pg.is_packed() && pgt.is_packed(), "{tag}: to_packed layout");
+    assert_eq!(pg, want_g, "{tag}: packed forward");
+    assert_eq!(pgt, want_gt, "{tag}: packed transpose");
+}
+
+/// Seeded property test: random mixed batches through validation, applied
+/// to builder and DynCsr in lockstep, must stay logically identical on
+/// both ER and hub-heavy RMAT topologies.
+#[test]
+fn dyncsr_matches_rebuild_through_random_batches() {
+    for (gname, mut b) in [
+        ("er", er::generate(600, 5.0, 17)),
+        ("rmat-web", rmat::generate(10, 6.0, rmat::RmatParams::WEB, 19)),
+    ] {
+        b.ensure_self_loops();
+        let mut dc = DynCsr::from_builder(&b);
+        assert_tracks(&dc, &b, &format!("{gname}/initial"));
+        for seed in 0..10u64 {
+            let raw = batch::random_batch(&b, 40, 0.6, 100 + seed);
+            let clean = batch::validate(&b, &raw).clean;
+            batch::apply(&mut b, &clean);
+            dc.apply_batch(&clean);
+            assert_tracks(&dc, &b, &format!("{gname}/seed{seed}"));
+        }
+    }
+}
+
+/// Deleting every real edge in one batch empties the adjacency (only
+/// self-loops remain), overshoots the slack limit and forces a compaction;
+/// a refill batch afterwards proves the compacted arena still grows.
+#[test]
+fn emptying_and_refilling_survives_compaction() {
+    let mut b = er::generate(400, 16.0, 23);
+    b.ensure_self_loops();
+    let mut dc = DynCsr::from_builder(&b);
+    let wipe = BatchUpdate { deletions: b.real_edges(), insertions: Vec::new() };
+    let clean = batch::validate(&b, &wipe).clean;
+    assert_eq!(clean.deletions.len(), wipe.deletions.len(), "wipe is all-clean");
+    batch::apply(&mut b, &clean);
+    dc.apply_batch(&clean);
+    assert!(dc.compactions() > 0, "emptied arena must have compacted");
+    assert_tracks(&dc, &b, "post-wipe");
+
+    let refill = batch::random_batch(&b, 300, 1.0, 29);
+    let clean = batch::validate(&b, &refill).clean;
+    batch::apply(&mut b, &clean);
+    dc.apply_batch(&clean);
+    assert_tracks(&dc, &b, "post-refill");
+}
+
+/// Drive one seeded update sequence through two services that differ only
+/// in CSR mode and assert bitwise-equal ranks after every update.
+fn assert_modes_agree(cfg: PagerankConfig, forced: Option<Approach>, tag: &str) {
+    let mk = |mode: CsrMode| {
+        DynamicGraphService::new(er::generate(500, 5.0, 31), None, cfg.with_csr_mode(mode))
+    };
+    let mut inc = mk(CsrMode::Incremental);
+    let mut reb = mk(CsrMode::Rebuild);
+    inc.ensure_ranks().unwrap();
+    reb.ensure_ranks().unwrap();
+    // shadow builder: the services own theirs privately, so batches are
+    // generated against a same-seed mirror kept in lockstep
+    let mut shadow = er::generate(500, 5.0, 31);
+    shadow.ensure_self_loops();
+    for seed in 0..4u64 {
+        let upd = batch::random_batch(&shadow, 10, 0.7, 7_000 + seed);
+        batch::apply(&mut shadow, &upd);
+        let (ri, rr) = match forced {
+            Some(a) => (
+                inc.apply_update_with(upd.clone(), a).unwrap(),
+                reb.apply_update_with(upd, a).unwrap(),
+            ),
+            None => (inc.apply_update(upd.clone()).unwrap(), reb.apply_update(upd).unwrap()),
+        };
+        assert_eq!(ri.approach, rr.approach, "{tag}/seed{seed}: approach");
+        assert_eq!(ri.iterations, rr.iterations, "{tag}/seed{seed}: iterations");
+        assert_eq!(
+            ri.initially_affected, rr.initially_affected,
+            "{tag}/seed{seed}: affected"
+        );
+        assert_eq!(ri.num_edges, rr.num_edges, "{tag}/seed{seed}: edge count");
+        for (i, (x, y)) in
+            inc.ranks().unwrap().iter().zip(reb.ranks().unwrap()).enumerate()
+        {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{tag}/seed{seed}: rank[{i}] diverged ({x} vs {y})"
+            );
+        }
+    }
+}
+
+/// The service-level matrix: every approach of the paper × threads {1, 8}
+/// × SIMD backend, incremental vs rebuild, bitwise.
+#[test]
+fn serving_ranks_bitwise_equal_across_modes_approaches_threads_simd() {
+    let approaches = [
+        None, // policy-chosen
+        Some(Approach::NaiveDynamic),
+        Some(Approach::DynamicTraversal),
+        Some(Approach::DynamicFrontier),
+        Some(Approach::DynamicFrontierPruning),
+    ];
+    for &threads in &[1usize, 8] {
+        for simd in [SimdPolicy::Scalar, SimdPolicy::Vector] {
+            let cfg =
+                PagerankConfig::default().with_threads(threads).with_simd(simd);
+            for forced in approaches {
+                let tag = format!(
+                    "t{threads}/{}/{}",
+                    simd.as_str(),
+                    forced.map_or("policy", |a| a.label())
+                );
+                assert_modes_agree(cfg, forced, &tag);
+            }
+        }
+    }
+}
+
+/// A graph-emptying batch through the full service, both modes: the
+/// post-wipe graph is self-loops only (uniform ranks), and both modes keep
+/// serving identical bits through the wipe and a refill.
+#[test]
+fn serving_survives_graph_emptying_batch_in_both_modes() {
+    let mk = |mode: CsrMode| {
+        DynamicGraphService::new(
+            er::generate(300, 12.0, 37),
+            None,
+            PagerankConfig::default().with_csr_mode(mode),
+        )
+    };
+    let mut inc = mk(CsrMode::Incremental);
+    let mut reb = mk(CsrMode::Rebuild);
+    inc.ensure_ranks().unwrap();
+    reb.ensure_ranks().unwrap();
+    let mut shadow = er::generate(300, 12.0, 37);
+    shadow.ensure_self_loops();
+
+    let wipe = BatchUpdate { deletions: shadow.real_edges(), insertions: Vec::new() };
+    batch::apply(&mut shadow, &wipe);
+    let ri = inc.apply_update(wipe.clone()).unwrap();
+    let rr = reb.apply_update(wipe).unwrap();
+    assert_eq!(ri.num_edges, rr.num_edges);
+    assert_eq!(ri.num_edges, shadow.num_edges(), "self-loops only");
+    let n = shadow.num_vertices() as f64;
+    for (i, (x, y)) in inc.ranks().unwrap().iter().zip(reb.ranks().unwrap()).enumerate()
+    {
+        assert_eq!(x.to_bits(), y.to_bits(), "wipe: rank[{i}]");
+        assert!((x - 1.0 / n).abs() < 1e-8, "wipe: rank[{i}] = {x} not uniform");
+    }
+
+    let refill = batch::random_batch(&shadow, 200, 1.0, 41);
+    batch::apply(&mut shadow, &refill);
+    inc.apply_update(refill.clone()).unwrap();
+    reb.apply_update(refill).unwrap();
+    for (i, (x, y)) in inc.ranks().unwrap().iter().zip(reb.ranks().unwrap()).enumerate()
+    {
+        assert_eq!(x.to_bits(), y.to_bits(), "refill: rank[{i}]");
+    }
+}

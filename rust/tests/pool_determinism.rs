@@ -170,20 +170,31 @@ fn forced_steals_under_stress_delays_change_nothing() {
 }
 
 /// Write a digest of every engine's rank bits under the *resolved* thread
-/// count and SIMD pin (so `PAGERANK_THREADS` and `PAGERANK_SIMD` apply —
-/// the config stays `Auto`). `ci.sh` runs the suite under all four
-/// {threads 1, 8} × {simd 0, 1} combinations and diffs the four files: any
-/// schedule-, thread- or instruction-path-dependent bit anywhere in the
-/// engine stack fails the gate. Hashing goes through
+/// count, SIMD pin and CSR-mode pin (so `PAGERANK_THREADS`,
+/// `PAGERANK_SIMD` and `PAGERANK_CSR` apply — the config stays `Auto`).
+/// `ci.sh` runs the suite under {threads 1, 8} × {simd 0, 1} × {csr
+/// rebuild, incremental} combinations and diffs the files: any schedule-,
+/// thread-, instruction-path- or CSR-layout-dependent bit anywhere in the
+/// engine or serving stack fails the gate. Hashing goes through
 /// `util::digest::fnv1a_ranks`, which normalizes `-0.0` so a semantically
 /// equal sign-of-zero bit can never fail the diff.
+///
+/// Two sections per file: the raw engine matrix (CSR-mode independent —
+/// the engines see whatever CSR they are handed), then a serving section
+/// driving a coordinator end-to-end, where `PAGERANK_CSR` decides between
+/// incremental maintenance and per-update rebuild.
 #[test]
 fn write_golden_rank_digest() {
+    use pagerank_dynamic::coordinator::DynamicGraphService;
+    use pagerank_dynamic::graph::CsrMode;
+
     let resolved = par::resolve(0);
     let simd_pin = match std::env::var("PAGERANK_SIMD") {
         Ok(s) if s.trim() == "0" => 0,
         _ => 1,
     };
+    // same resolution the coordinator applies to CsrMode::Auto
+    let csr_pin = if CsrMode::default().resolve_incremental() { "i" } else { "r" };
     let mut out = String::new();
     for (gname, b) in generators() {
         let sc = scenario(b);
@@ -192,8 +203,27 @@ fn write_golden_rank_digest() {
             let _ = writeln!(out, "{gname} {ename} {h:016x} iters={}", res.iterations);
         }
     }
+    // serving section: coordinator end-to-end (validation, maintenance,
+    // policy, engines) over a seeded update sequence
+    for (gname, b) in generators() {
+        let mut shadow = b.clone();
+        shadow.ensure_self_loops();
+        let mut svc = DynamicGraphService::new(b, None, PagerankConfig::default());
+        svc.ensure_ranks().unwrap();
+        for seed in 0..3u64 {
+            let upd = batch::random_batch(&shadow, 8, 0.7, 9_000 + seed);
+            batch::apply(&mut shadow, &upd);
+            svc.apply_update(upd).unwrap();
+            let h = digest::fnv1a_ranks(svc.ranks().unwrap());
+            let _ = writeln!(out, "serve-{gname} seed{seed} {h:016x}");
+        }
+    }
     // cwd of integration tests is the crate root (rust/); the workspace
     // build dir lives at ../target, so rust/target is ours alone.
     std::fs::create_dir_all("target").unwrap();
-    std::fs::write(format!("target/rank_digest_t{resolved}_s{simd_pin}.txt"), out).unwrap();
+    std::fs::write(
+        format!("target/rank_digest_t{resolved}_s{simd_pin}_c{csr_pin}.txt"),
+        out,
+    )
+    .unwrap();
 }
